@@ -1,0 +1,110 @@
+"""Shared benchmark substrate: one trained-with-outliers GPT-2-family model
+(cached across benchmark runs) + quantized perplexity evaluation.
+
+This is the paper's experimental setup transplanted offline (DESIGN.md §6):
+GPT-2 architecture, abs-max quantization of the attention+MLP projections,
+fake quantization, language-modeling perplexity; WikiText-2 replaced by the
+seeded synthetic corpus, pretrained checkpoints replaced by a short training
+run + function-preserving outlier injection.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.core.calibrate import calibrate
+from repro.core.context import QuantCtx
+from repro.core.muxq import QuantConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.data.synthetic import corpus
+from repro.models import transformer as T
+from repro.models.surgery import inject_outliers, pick_outlier_channels
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+RESULTS = Path(__file__).resolve().parent / "results"
+MODEL_DIR = RESULTS / "bench_model"
+
+# the benchmark model: GPT-2-family (paper's arch), CPU-sized
+BENCH_CFG = (get_config("gpt2-small", reduced=True)
+             .replace(n_layers=3, d_model=96, n_heads=4, n_kv_heads=4,
+                      d_ff=384, vocab_size=300))
+SEQ_LEN = 96
+TRAIN_STEPS = 200
+OUTLIER_GAMMA = 20.0
+N_OUTLIER_CH = 5
+
+
+def get_trained_model(steps: int = TRAIN_STEPS):
+    """Train (or load the cached) benchmark model, then inject outliers."""
+    cfg = BENCH_CFG
+    last = ckpt.latest_step(str(MODEL_DIR))
+    if last is None or last < steps:
+        trainer = Trainer(
+            cfg,
+            TrainConfig(steps=steps, ckpt_dir=str(MODEL_DIR), ckpt_every=steps,
+                        log_every=50, resume=True),
+            PipelineConfig(seq_len=SEQ_LEN, global_batch=8),
+            AdamWConfig(lr=3e-3, total_steps=steps, warmup_steps=20),
+        )
+        trainer.run()
+        params = trainer.params
+    else:
+        template = T.init_params(cfg, jax.random.PRNGKey(0))
+        params, _, _ = ckpt.restore(str(MODEL_DIR), last, template)
+
+    channels = pick_outlier_channels(cfg, N_OUTLIER_CH, seed=1)
+    params_outlier = inject_outliers(cfg, params, channels, OUTLIER_GAMMA)
+    return cfg, params, params_outlier, channels
+
+
+def eval_batches(n: int = 8, seed: int = 777) -> List[Dict[str, np.ndarray]]:
+    """Held-out batches (disjoint seed from the training stream)."""
+    pipe = TokenPipeline(PipelineConfig(seq_len=SEQ_LEN, global_batch=8,
+                                        seed=seed), text=corpus(4000, seed=9))
+    return [pipe.batch_at(i) for i in range(n)]
+
+
+def calibrate_model(cfg, params, n_batches: int = 2):
+    fwd = lambda p, b, ctx: T.forward(cfg, p, jnp.asarray(b["tokens"]), ctx,
+                                      scan=False)
+    stats, masks, smooths = calibrate(fwd, params,
+                                      eval_batches(n_batches, seed=555))
+    return stats, masks, smooths
+
+
+def perplexity(cfg, params, quant: Optional[QuantConfig], masks, smooths,
+               batches) -> Tuple[float, float]:
+    """Returns (ppl, us_per_eval_step)."""
+    ctx = None if quant is None else QuantCtx(quant, masks, smooths)
+
+    def eval_step(p, tokens, labels):
+        out = T.forward(cfg, p, tokens, ctx, scan=False)
+        from repro.models.common import cross_entropy
+        return cross_entropy(out["logits"], labels, cfg.vocab_size)
+
+    jf = jax.jit(eval_step)
+    # warmup
+    b0 = batches[0]
+    jf(params, jnp.asarray(b0["tokens"]), jnp.asarray(b0["labels"])).block_until_ready()
+    losses = []
+    t0 = time.perf_counter()
+    for b in batches:
+        losses.append(float(jf(params, jnp.asarray(b["tokens"]),
+                               jnp.asarray(b["labels"]))))
+    dt = (time.perf_counter() - t0) / len(batches)
+    return float(np.exp(np.mean(losses))), dt * 1e6
+
+
+def emit(rows: List[Tuple[str, float, str]]) -> None:
+    """Assignment CSV contract: name,us_per_call,derived."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,34 @@
+"""Beyond-paper: exp_factor trade-off (paper §3.3 discusses but doesn't
+sweep).  Perplexity vs exp in 1..4 at the paper's operating point."""
+from __future__ import annotations
+
+from repro.core.muxq import QuantConfig
+
+from benchmarks import common
+
+
+def run(emit=True):
+    cfg, _, params, _ = common.get_trained_model()
+    _, masks, smooths = common.calibrate_model(cfg, params)
+    batches = common.eval_batches()
+    rows = []
+    for exp in (1, 2, 3, 4):
+        q = QuantConfig(method="muxq", act_bits=6, weight_bits=8,
+                        act_granularity="per_tensor", outlier_mode="static",
+                        exp_factor=exp)
+        ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+        rows.append((f"exp_sweep/IA6/exp{exp}", us, f"ppl={ppl:.4f}"))
+    # the combination claim (paper §5): MUXQ + SmoothQuant
+    for method in ("smoothquant", "muxq_smooth"):
+        q = QuantConfig(method=method, act_bits=6, weight_bits=8,
+                        act_granularity="per_tensor", outlier_mode="static",
+                        exp_factor=2)
+        ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+        rows.append((f"exp_sweep/IA6/{method}", us, f"ppl={ppl:.4f}"))
+    if emit:
+        common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Kernel micro-benchmarks (paper §4.5: INT8 GEMM vs FP16 GEMM).
+
+Wall times on this container are CPU-reference numbers (TPU is the target —
+interpret-mode Pallas is NOT timed; we time the jnp int8/fp32 paths and
+derive the analytic TPU speedup from the roofline constants)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.roofline import PEAK_BF16, PEAK_INT8
+from repro.core import quantizers as Q
+from repro.kernels import ops
+
+from benchmarks import common
+
+
+def _time(f, *args, n=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(emit=True):
+    rows = []
+    m, k, n = 256, 1024, 1024
+    x = jax.random.normal(jax.random.PRNGKey(0), (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n)) * 0.05
+    flops = 2 * m * k * n
+
+    f_fp = jax.jit(lambda a, b: a @ b)
+    us = _time(f_fp, x, w)
+    rows.append((f"kernel/fp32_gemm_{m}x{k}x{n}", us,
+                 f"gflops={flops / us / 1e3:.2f}"))
+
+    xi, sx = Q.quantize(x, 8, "per_token")
+    wi, sw = Q.quantize(w, 8, "per_channel")
+    f_i8 = jax.jit(lambda a, b: Q.int_matmul(a, b))
+    us = _time(f_i8, xi, wi)
+    rows.append((f"kernel/int8_gemm_{m}x{k}x{n}", us,
+                 f"gflops={flops / us / 1e3:.2f}"))
+
+    mask = np.zeros(k, bool)
+    mask[:16] = True
+    mw = ops.prepare_weights(w, mask, exp_factor=2, bk=128)
+    f_muxq = jax.jit(lambda a: ops.muxq_linear_ref(a, mw, 2))
+    us = _time(f_muxq, x)
+    rows.append((f"kernel/muxq_gemm_jnp_{m}x{k}x{n}", us,
+                 f"gflops={flops / us / 1e3:.2f}"))
+
+    # analytic TPU-target speedup of the MUXQ path (uniform int8 on MXU)
+    rows.append(("kernel/tpu_int8_speedup_analytic", 0.0,
+                 f"x{PEAK_INT8 / PEAK_BF16:.1f}_over_bf16"))
+    # the fused form saves the aux GEMM entirely vs the paper's two-GEMM NPU
+    # form: overhead = extra K blocks from padding only
+    pad_frac = (mw.pad_out + mw.pad_tail) / k
+    rows.append(("kernel/muxq_fused_aux_overhead", 0.0,
+                 f"pad_fraction={pad_frac:.3f}_vs_paper_two_gemm=+n_out/K"))
+    if emit:
+        common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

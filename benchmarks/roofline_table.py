@@ -1,0 +1,63 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh="16-16", tag=""):
+    recs = []
+    for f in sorted(RESULTS.glob(f"*_{mesh}_*{tag}.json")):
+        r = json.loads(f.read_text())
+        if tag == "" and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def fmt_row(r):
+    if r["status"] == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | — | — | — | — | skipped | "
+                f"{r.get('reason', '')[:40]} |")
+    if r["status"] != "ok":
+        return f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR | {r.get('error','')[:40]} |"
+    ro = r["roofline"]
+    return ("| {arch} | {shape} | {c:.2e} | {m:.2e} | {x:.2e} | {dom} | "
+            "{mfu:.3f} | {useful:.2f} |").format(
+        arch=r["arch"], shape=r["shape"], c=ro["compute_s"], m=ro["memory_s"],
+        x=ro["collective_s"], dom=ro["dominant"], mfu=ro["mfu_bound"],
+        useful=ro["useful_fraction"])
+
+
+def markdown(mesh="16-16", tag=""):
+    recs = load(mesh, tag)
+    order = {s: i for i, s in enumerate(SHAPE_ORDER)}
+    recs.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | mfu_bound | useful_frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    lines += [fmt_row(r) for r in recs]
+    return "\n".join(lines)
+
+
+def run(emit=True):
+    rows = []
+    for r in load("16-16"):
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        rows.append((f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                     f"step_s={ro['step_s']:.3e};dom={ro['dominant']};"
+                     f"mfu_bound={ro['mfu_bound']:.3f}"))
+    if emit:
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown())

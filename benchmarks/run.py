@@ -1,0 +1,36 @@
+"""Benchmark runner: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (assignment contract)."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (exp_factor_sweep, fig1_outliers, fig3_quant_error,
+                            kernel_bench, roofline_table, table1_perplexity,
+                            table2_weight_bits)
+    print("name,us_per_call,derived")
+    suites = [
+        ("table1", table1_perplexity),
+        ("table2", table2_weight_bits),
+        ("fig1", fig1_outliers),
+        ("fig3", fig3_quant_error),
+        ("exp_sweep", exp_factor_sweep),
+        ("kernels", kernel_bench),
+        ("roofline", roofline_table),
+    ]
+    failed = []
+    for name, mod in suites:
+        try:
+            mod.run(emit=True)
+        except Exception as e:  # keep the suite going; report at the end
+            failed.append((name, e))
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        print(f"# FAILED suites: {[n for n, _ in failed]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Table 1: perplexity under (granularity x IA bits) for
+naive / MUXQ / LLM.int8() / fp16.  W=8 throughout (paper's setting)."""
+from __future__ import annotations
+
+from repro.core.muxq import QuantConfig
+
+from benchmarks import common
+
+
+def run(emit=True):
+    cfg, _, params, channels = common.get_trained_model()
+    _, masks, smooths = common.calibrate_model(cfg, params)
+    batches = common.eval_batches()
+
+    rows = []
+    ppl_fp, us = common.perplexity(cfg, params, None, masks, smooths, batches)
+    rows.append((f"table1/fp16", us, f"ppl={ppl_fp:.4f}"))
+
+    grid = [("per_tensor", [8, 7, 6, 5]), ("per_token", [8, 7, 6, 5])]
+    for gran, bits_list in grid:
+        for bits in bits_list:
+            for method in ("naive", "muxq", "llm_int8"):
+                q = QuantConfig(method=method, act_bits=bits, weight_bits=8,
+                                act_granularity=gran,
+                                weight_granularity="per_tensor" if gran == "per_tensor" else "per_channel",
+                                outlier_mode="static", exp_factor=2)
+                ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+                rows.append((f"table1/{gran}/IA{bits}/{method}", us,
+                             f"ppl={ppl:.4f}"))
+    if emit:
+        common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

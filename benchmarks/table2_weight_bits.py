@@ -1,0 +1,31 @@
+"""Paper Table 2: perplexity under reduced WEIGHT precision (IA=8).
+The paper's claim: weight bits shift all three methods by a similar amount
+(both MUXQ and LLM.int8() target activation outliers)."""
+from __future__ import annotations
+
+from repro.core.muxq import QuantConfig
+
+from benchmarks import common
+
+
+def run(emit=True):
+    cfg, _, params, _ = common.get_trained_model()
+    _, masks, smooths = common.calibrate_model(cfg, params)
+    batches = common.eval_batches()
+
+    rows = []
+    for wbits in (8, 5, 4):
+        for method in ("naive", "muxq", "llm_int8"):
+            q = QuantConfig(method=method, act_bits=8, weight_bits=wbits,
+                            act_granularity="per_tensor",
+                            weight_granularity="per_tensor",
+                            outlier_mode="static", exp_factor=2)
+            ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+            rows.append((f"table2/W{wbits}/{method}", us, f"ppl={ppl:.4f}"))
+    if emit:
+        common.emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,107 @@
+"""Fault-tolerant checkpointing: atomic npz shards + manifest, keep-k GC,
+elastic resharding on restore.
+
+Layout:
+    <dir>/step_000123/params.npz, opt.npz, meta.json   (tmp-dir + rename =
+    atomic: a crash mid-write never corrupts the newest checkpoint)
+    <dir>/LATEST  -> step id (written last)
+
+Restore puts leaves onto the *current* mesh's NamedShardings — a checkpoint
+saved on one mesh shape restores onto any other (elastic scaling).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}")
+        leaves.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype") else arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, params, opt_state=None,
+         extra: Optional[Dict[str, Any]] = None, keep: int = 3) -> Path:
+    base = Path(ckpt_dir)
+    base.mkdir(parents=True, exist_ok=True)
+    final = base / f"step_{step:08d}"
+    tmp = Path(tempfile.mkdtemp(dir=base, prefix=".tmp_"))
+    try:
+        np.savez(tmp / "params.npz", **_flatten(params))
+        if opt_state is not None:
+            np.savez(tmp / "opt.npz", **_flatten(opt_state))
+        (tmp / "meta.json").write_text(json.dumps(
+            {"step": step, **(extra or {})}, default=str))
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)                       # atomic publish
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    (base / "LATEST.tmp").write_text(str(step))
+    os.replace(base / "LATEST.tmp", base / "LATEST")
+    _gc(base, keep)
+    return final
+
+
+def _gc(base: Path, keep: int) -> None:
+    steps = sorted(p for p in base.glob("step_*") if p.is_dir())
+    for p in steps[:-keep]:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    f = Path(ckpt_dir) / "LATEST"
+    if not f.exists():
+        return None
+    step = int(f.read_text().strip())
+    if not (Path(ckpt_dir) / f"step_{step:08d}" / "meta.json").exists():
+        # LATEST written but dir lost — fall back to newest complete dir
+        steps = sorted(Path(ckpt_dir).glob("step_*/meta.json"))
+        return int(json.loads(steps[-1].read_text())["step"]) if steps else None
+    return step
+
+
+def restore(ckpt_dir: str, step: int, params_template, opt_template=None,
+            shardings=None, opt_shardings=None
+            ) -> Tuple[Any, Optional[Any], Dict[str, Any]]:
+    """Restore onto the current mesh: ``shardings`` (pytree of
+    NamedSharding, optional) reshards every leaf via device_put — elastic
+    across mesh shapes since npz holds the full (unsharded) array."""
+    d = Path(ckpt_dir) / f"step_{step:08d}"
+    flat = dict(np.load(d / "params.npz"))
+    params = _unflatten_into(params_template, flat)
+    if shardings is not None:
+        params = jax.device_put(params, shardings)
+    opt = None
+    if opt_template is not None and (d / "opt.npz").exists():
+        opt = _unflatten_into(opt_template, dict(np.load(d / "opt.npz")))
+        if opt_shardings is not None:
+            opt = jax.device_put(opt, opt_shardings)
+    meta = json.loads((d / "meta.json").read_text())
+    return params, opt, meta

@@ -1,0 +1,4 @@
+"""Architecture registry: one module per assigned arch (+ the paper's own
+GPT-2 family).  Each module exports CONFIG (the exact published shape) and
+REDUCED (a same-family miniature for CPU smoke tests)."""
+from repro.configs.registry import get_config, list_archs, ARCHS  # noqa: F401

@@ -1,0 +1,48 @@
+"""Offline calibration runner.
+
+Runs the model eagerly over a handful of sample batches with a CollectCtx,
+then derives the static artifacts consumed by QuantCtx:
+
+  * per-site outlier masks   (|x| > threshold criterion, paper §3.3)
+  * per-site SmoothQuant activation abs-max vectors
+
+One-off, host-side, cheap (a few batches through an unjitted forward).
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, Tuple
+
+import numpy as np
+
+from repro.core.context import CollectCtx
+from repro.core.outliers import CalibrationStats, DEFAULT_THRESHOLD
+
+
+def calibrate(forward: Callable, params, batches: Iterable,
+              threshold: float = DEFAULT_THRESHOLD,
+              ) -> Tuple[CalibrationStats, Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+    """``forward(params, batch, ctx=...)`` is invoked eagerly per batch.
+
+    Returns (raw stats, outlier masks, smoothquant act-absmax per site).
+    """
+    ctx = CollectCtx()
+    for batch in batches:
+        forward(params, batch, ctx=ctx)
+    masks = ctx.stats.masks(threshold)
+    smooths = {k: v.absmax for k, v in ctx.stats.sites.items()}
+    return ctx.stats, masks, smooths
+
+
+def stack_layer_masks(masks: Dict[str, np.ndarray], site: str, n_layers: int) -> np.ndarray:
+    """Collect per-layer masks for one site name into an [L, d] array so a
+    scanned transformer can consume them (sliced by layer index inside scan).
+
+    Site naming convention: ``layer{idx}/{site}`` (see models/transformer.py).
+    """
+    per_layer = []
+    for i in range(n_layers):
+        key = f"layer{i}/{site}"
+        if key not in masks:
+            raise KeyError(f"no calibration entry for {key}")
+        per_layer.append(masks[key])
+    return np.stack(per_layer)

@@ -1,0 +1,134 @@
+"""Matmul contexts — how quantization threads through the model zoo.
+
+Every *projection* matmul site in ``repro.models`` is executed via a ctx
+callable ``ctx(name, x, w, mask=None, smooth=None)``.  The paper quantizes
+GPT-2's c_attn / attn-c_proj / c_fc / mlp-c_proj; our generalization is
+"every dense projection", with embeddings / lm_head / attention score
+matmuls left in the compute dtype (matching the paper's target-layer set).
+
+Weight leaves arrive RAW (the ctx owns dtype handling), in one of two forms:
+  * a plain array (fp master / bf16) — quantize-at-use, the paper's
+    fake-quant protocol;
+  * a dict {"q": int8, "s": f32 scales} — OFFLINE pre-quantized weights
+    (``repro.core.prequant``): the deployment path.  Avoids the per-step
+    fp32 quantize pass over every weight (the dominant HBM traffic in the
+    baseline decode roofline — see EXPERIMENTS.md §Perf).
+
+Contexts:
+  FpCtx      — plain matmul (FP16 baseline row of Table 1).
+  CollectCtx — records per-channel activation stats (calibration pass).
+               MUST run eagerly / unscanned: it mutates a host-side dict.
+  QuantCtx   — applies a QuantConfig; resolves static masks / smoothing
+               factors by site name, or accepts them as explicit args when
+               running under ``lax.scan`` (host dict lookups don't trace).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantizers as Q
+from repro.core.muxq import QuantConfig, qmatmul
+from repro.core.outliers import CalibrationStats
+
+
+def _is_prequant(w) -> bool:
+    return isinstance(w, dict) and "q" in w
+
+
+def _dense_w(w, dtype):
+    """Materialize a compute-dtype dense weight from either form."""
+    if _is_prequant(w):
+        return (w["q"].astype(jnp.float32) * w["s"]).astype(dtype)
+    return w.astype(dtype)
+
+
+def _prequant_matmul(x, w, cfg: QuantConfig, mask=None):
+    """x (fp) @ pre-quantized int8 weight: per-token int8 activations,
+    INT GEMM, fused dequant.  MUXQ rides as the exact int32 channel
+    multiplier on the activation side (DESIGN.md §3.2) — the stored weight
+    never changes."""
+    xq = x
+    if mask is not None and cfg.method in ("muxq", "muxq_smooth"):
+        from repro.core.muxq import decompose
+        xq = decompose(x, mask, cfg.exp_factor)
+    xi, sx = Q.quantize(xq, cfg.act_bits, cfg.act_granularity)
+    if mask is not None and cfg.method in ("muxq", "muxq_smooth"):
+        mult = jnp.where(mask, jnp.int32(2 ** cfg.exp_factor), jnp.int32(1))
+        xi = xi.astype(jnp.int32) * mult
+    yi = Q.int_matmul(xi, w["q"])
+    return (yi.astype(jnp.float32) * sx * w["s"]).astype(x.dtype)
+
+
+class FpCtx:
+    quantized = False
+
+    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+        return x @ _dense_w(w, x.dtype)
+
+    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+        """Per-expert matmul: x [e, c, d] @ w [e, d, f] -> [e, c, f]."""
+        return jnp.einsum("ecd,edf->ecf", x, _dense_w(w, x.dtype))
+
+
+class CollectCtx:
+    """Calibration pass: record per-channel |x| stats at every site."""
+    quantized = False
+
+    def __init__(self, stats: Optional[CalibrationStats] = None) -> None:
+        self.stats = stats or CalibrationStats()
+
+    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+        import jax
+        if isinstance(x, jax.core.Tracer):  # pragma: no cover - guarded misuse
+            raise RuntimeError("CollectCtx must run eagerly (not under jit/scan)")
+        self.stats.update(name, x)
+        return x @ _dense_w(w, x.dtype)
+
+    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+        import jax
+        if isinstance(x, jax.core.Tracer):  # pragma: no cover - guarded misuse
+            raise RuntimeError("CollectCtx must run eagerly (not under jit/scan)")
+        self.stats.update(name, x.reshape(-1, x.shape[-1]))
+        return jnp.einsum("ecd,edf->ecf", x, _dense_w(w, x.dtype))
+
+
+class QuantCtx:
+    quantized = True
+
+    def __init__(self, cfg: QuantConfig,
+                 masks: Optional[Dict[str, np.ndarray]] = None,
+                 smooths: Optional[Dict[str, np.ndarray]] = None) -> None:
+        self.cfg = cfg
+        self.masks = masks or {}
+        self.smooths = smooths or {}
+
+    def _resolve(self, name, mask, smooth):
+        if mask is None and self.cfg.outlier_mode == "static":
+            m = self.masks.get(name)
+            mask = None if m is None else jnp.asarray(m)
+        if smooth is None:
+            s = self.smooths.get(name)
+            smooth = None if s is None else jnp.asarray(s)
+        return mask, smooth
+
+    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+        mask, smooth = self._resolve(name, mask, smooth)
+        if _is_prequant(w):
+            return _prequant_matmul(x, w, self.cfg, mask)
+        return qmatmul(x, w.astype(x.dtype), self.cfg, mask=mask, smooth=smooth)
+
+    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+        """Quantized per-expert matmul: vmap the 2-D policy over the expert
+        axis (per-expert weight scales, shared outlier mask — DESIGN.md §5)."""
+        import jax
+        mask, smooth = self._resolve(name, mask, smooth)
+        if _is_prequant(w):
+            fn = lambda xe, qe, se: _prequant_matmul(xe, {"q": qe, "s": se},
+                                                     self.cfg, mask)
+            return jax.vmap(fn)(x, w["q"], w["s"])
+        fn = lambda xe, we: qmatmul(xe, we.astype(x.dtype), self.cfg,
+                                    mask=mask, smooth=smooth)
+        return jax.vmap(fn)(x, w)

@@ -1,0 +1,39 @@
+"""LLM.int8() mixed-precision decomposition baseline (Dettmers et al. 2022).
+
+Outlier columns of X (and the matching rows of W) are computed in FP16;
+everything else goes through the INT8 path with per-token / per-channel
+scales.  This is the mixed-precision scheme whose FP16 side path MUXQ
+removes.  Mask-based (shape-static) so it jits; the FP16 'gather' of the
+original CUDA implementation is expressed as a masked dense matmul — on TPU
+that is also the honest cost model (dynamic gathers are the thing that
+doesn't map to the hardware, see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import quantizers as Q
+from repro.core import outliers as O
+
+
+def llm_int8_matmul(x: jnp.ndarray, w: jnp.ndarray, cfg, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Y = X_out.W_out  (FP16)  +  dequant(X_norm_int . W_norm_int)."""
+    if mask is None:
+        mask = O.outlier_mask(x, cfg.outlier_threshold)
+    x_norm = jnp.where(mask, 0, x).astype(x.dtype)
+    x_out = jnp.where(mask, x, 0).astype(x.dtype)
+    # FP16 path: outlier columns of X times the matching rows of W, full prec.
+    y_fp = x_out @ w
+    # INT path: abs-max quant of the outlier-free remainder.
+    if cfg.real_int8:
+        y_int = Q.quantized_matmul(x_norm, w, cfg.act_bits, cfg.weight_bits,
+                                   cfg.act_granularity, cfg.weight_granularity)
+    else:
+        xq = Q.fake_quant(x_norm, cfg.act_bits, cfg.act_granularity)
+        # keep the masked columns exactly zero after fake quant
+        xq = jnp.where(mask, 0, xq).astype(x.dtype)
+        wq = Q.fake_quant(w, cfg.weight_bits, cfg.weight_granularity)
+        y_int = xq @ wq
+    return (y_fp + y_int).astype(x.dtype)

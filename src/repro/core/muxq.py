@@ -1,0 +1,221 @@
+"""MUXQ — Mixed-to-Uniform Precision Matrix Quantization (paper §3).
+
+Core decomposition (paper Eq. 4-6), for outlier channel set M and
+``exp_factor`` e:
+
+    Body = X with outlier columns divided by 2^e       (exponent shift)
+    Aux  = Body restricted to outlier columns          (Aux = Body_outlier)
+    X    = Body + (2^e - 1) * Aux                      (exact)
+
+so the matmul splits into two *uniform-precision* INT GEMMs (paper Eq. 7):
+
+    Y = Body.W + (2^e - 1) * (Aux . W)
+
+Two execution forms are provided:
+
+  * ``paper``  — the faithful two-GEMM form: Body and Aux are quantized
+    independently (own scales) and multiplied separately.  This is what a
+    fixed-function NPU MAC array executes.
+  * ``fused``  — the TPU-native form (DESIGN.md §3.2): Body alone is
+    quantized; since Aux shares Body's integer representation,
+    Body + (2^e-1)*Aux == 2^e * Body on outlier columns, i.e. ONE int8 GEMM
+    whose outlier K-blocks are scaled by 2^e inside the INT32 accumulator.
+    Zero extra FLOPs.  ``kernels/muxq_gemm.py`` implements this in Pallas.
+
+Both fake-quant (paper's evaluation protocol) and real INT8 pipelines exist.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Literal, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantizers as Q
+from repro.core import outliers as O
+
+Method = Literal["fp", "naive", "muxq", "llm_int8", "smoothquant", "muxq_smooth"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantization policy for every matmul site (paper Table 1 grid)."""
+    method: Method = "muxq"
+    act_bits: int = 8
+    weight_bits: int = 8
+    act_granularity: Q.Granularity = "per_tensor"
+    weight_granularity: Q.Granularity = "per_tensor"
+    exp_factor: int = 2                 # paper §3.3: 2 under the |x|>6 criterion
+    outlier_threshold: float = O.DEFAULT_THRESHOLD
+    outlier_mode: Literal["dynamic", "static"] = "dynamic"
+    muxq_form: Literal["paper", "fused"] = "paper"
+    real_int8: bool = False             # False = fake quant (paper protocol)
+    smooth_alpha: float = 0.5           # SmoothQuant migration strength
+
+    def replace(self, **kw) -> "QuantConfig":
+        return dataclasses.replace(self, **kw)
+
+
+FP16 = QuantConfig(method="fp")
+
+
+# ---------------------------------------------------------------------------
+# Decomposition
+# ---------------------------------------------------------------------------
+
+def decompose(x: jnp.ndarray, mask: jnp.ndarray, exp_factor: int) -> jnp.ndarray:
+    """Return Body: X with outlier columns shifted down by 2^e (Eq. 4).
+
+    Aux is implicit (Aux = Body * mask, Eq. 5) — materialized only where the
+    execution form requires it.
+    """
+    scale = jnp.float32(2.0 ** (-exp_factor))
+    return jnp.where(mask, x * scale, x).astype(x.dtype)
+
+
+def reconstruct(body: jnp.ndarray, mask: jnp.ndarray, exp_factor: int) -> jnp.ndarray:
+    """Eq. 6: X = Body + (2^e - 1) * Aux.  Exact inverse of ``decompose``."""
+    aux = jnp.where(mask, body, 0)
+    return (body + (2.0 ** exp_factor - 1.0) * aux).astype(body.dtype)
+
+
+def _resolve_mask(x: jnp.ndarray, cfg: QuantConfig, mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if mask is not None:
+        return mask
+    return O.outlier_mask(x, cfg.outlier_threshold)
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant path (paper's evaluation protocol: quantize→dequantize→compute)
+# ---------------------------------------------------------------------------
+
+def muxq_fake_quant_act(x: jnp.ndarray, cfg: QuantConfig,
+                        mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Fake-quantized activation under MUXQ.
+
+    paper form : Body and Aux quantized with independent scales, then
+                 recombined:  X' = qdq(Body) + (2^e-1)*qdq(Aux)
+    fused form : one quantization of Body (shared scale); reconstruction
+                 multiplies outlier columns by 2^e exactly:
+                 X' = qdq(Body) * (2^e on M, 1 off M)
+    """
+    mask = _resolve_mask(x, cfg, mask)
+    body = decompose(x, mask, cfg.exp_factor)
+    if cfg.muxq_form == "fused":
+        bq = Q.fake_quant(body, cfg.act_bits, cfg.act_granularity)
+        return reconstruct(bq, mask, cfg.exp_factor)
+    # paper: independent quantization of Body and Aux
+    aux = jnp.where(mask, body, 0).astype(x.dtype)
+    bq = Q.fake_quant(body, cfg.act_bits, cfg.act_granularity)
+    # Aux abs-max must ignore the zeroed normal columns it never represents;
+    # quantize with a scale from the masked values only.
+    aq = Q.fake_quant(aux, cfg.act_bits, cfg.act_granularity)
+    aq = jnp.where(mask, aq, 0).astype(x.dtype)
+    return (bq + (2.0 ** cfg.exp_factor - 1.0) * aq).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Real INT8 path (uniform-precision GEMMs)
+# ---------------------------------------------------------------------------
+
+def muxq_matmul_paper(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig,
+                      mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Faithful two-GEMM INT8 execution (paper Eq. 7).
+
+    Both GEMMs are INT8 — no FP16 side path (this is the 'uniform precision'
+    claim vs LLM.int8()).  Mask-based so shapes stay static under jit; the
+    Aux GEMM multiplies a sparse (outlier-columns-only) INT8 matrix.
+    """
+    mask = _resolve_mask(x, cfg, mask)
+    body = decompose(x, mask, cfg.exp_factor)
+    aux = jnp.where(mask, body, 0).astype(x.dtype)
+
+    wi, sw = Q.quantize(w, cfg.weight_bits, cfg.weight_granularity)
+    bi, sb = Q.quantize(body, cfg.act_bits, cfg.act_granularity)
+    # Eq. 5: Aux = Body_outlier — the SAME integer representation, so Aux is
+    # quantized on Body's grid (shared scale); its int8 values are exactly
+    # the masked Body values.
+    ai, _ = Q.quantize(aux, cfg.act_bits, cfg.act_granularity, scale=sb)
+
+    y_body = Q.int_matmul(bi, wi).astype(jnp.float32) * sb * sw
+    y_aux = Q.int_matmul(ai, wi).astype(jnp.float32) * sb * sw
+    return (y_body + (2.0 ** cfg.exp_factor - 1.0) * y_aux).astype(x.dtype)
+
+
+def muxq_matmul_fused(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig,
+                      mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """TPU-native fused form: ONE INT8 GEMM with the outlier contribution
+    folded in as an exact power-of-two scaling of the masked channels.
+
+    Since Aux = Body_outlier shares Body's integer representation,
+      Y = (B_int * (2^e on M)) @ W_int * s_b * s_w
+    The channel scaling is applied to the INT32 domain (exact shift) — in the
+    Pallas kernel it is applied per K-block inside the accumulator loop; here
+    (reference jnp form) we scale the int8 operand's contribution via a
+    per-K-row multiplier on the weight side of the dequant identity.
+    """
+    mask = _resolve_mask(x, cfg, mask)
+    body = decompose(x, mask, cfg.exp_factor)
+    bi, sb = Q.quantize(body, cfg.act_bits, cfg.act_granularity)
+    wi, sw = Q.quantize(w, cfg.weight_bits, cfg.weight_granularity)
+    # Exact: scale the INT32 contribution of outlier K rows by 2^e.  Here
+    # (reference jnp form) the multiplier rides on the int32-widened operand;
+    # the Pallas kernel keeps int8 operands and applies the same multiplier
+    # per K-block inside the accumulator loop instead.
+    mult = jnp.where(mask, jnp.int32(2 ** cfg.exp_factor), jnp.int32(1))
+    yi = Q.int_matmul(bi.astype(jnp.int32) * mult, wi)
+    return (yi.astype(jnp.float32) * sb * sw).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Unified matmul dispatch — every quantized site in the model calls this.
+# ---------------------------------------------------------------------------
+
+def qmatmul(x: jnp.ndarray, w: jnp.ndarray, cfg: QuantConfig,
+            mask: Optional[jnp.ndarray] = None,
+            smooth: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Quantization-policy-dispatched matmul.
+
+    ``mask``   static calibrated outlier mask [in_features] (optional)
+    ``smooth`` SmoothQuant per-channel migration factors [in_features]
+    """
+    from repro.core import llm_int8 as L8  # local import: avoid cycle
+    from repro.core import smoothquant as SQ
+
+    if cfg.method == "fp":
+        return x @ w
+
+    if cfg.method in ("smoothquant", "muxq_smooth"):
+        x, w = SQ.apply_smoothing(x, w, smooth, alpha=cfg.smooth_alpha)
+        if cfg.method == "smoothquant":
+            cfg = cfg.replace(method="naive")
+        else:
+            cfg = cfg.replace(method="muxq")
+            # smoothing changes the activation distribution; a static mask
+            # calibrated pre-smoothing is still valid (same channel identity)
+
+    if cfg.method == "naive":
+        if cfg.real_int8:
+            return Q.quantized_matmul(x, w, cfg.act_bits, cfg.weight_bits,
+                                      cfg.act_granularity, cfg.weight_granularity)
+        xq = Q.fake_quant(x, cfg.act_bits, cfg.act_granularity)
+        wq = Q.fake_quant(w, cfg.weight_bits, cfg.weight_granularity)
+        return xq @ wq
+
+    if cfg.method == "muxq":
+        if cfg.outlier_mode == "dynamic":
+            mask = None  # force live detection
+        if cfg.real_int8:
+            fn = muxq_matmul_fused if cfg.muxq_form == "fused" else muxq_matmul_paper
+            return fn(x, w, cfg, mask)
+        xq = muxq_fake_quant_act(x, cfg, mask)
+        wq = Q.fake_quant(w, cfg.weight_bits, cfg.weight_granularity)
+        return xq @ wq
+
+    if cfg.method == "llm_int8":
+        if cfg.outlier_mode == "dynamic":
+            mask = None
+        return L8.llm_int8_matmul(x, w, cfg, mask)
+
+    raise ValueError(f"unknown method {cfg.method}")

@@ -1,0 +1,118 @@
+"""Outlier-channel detection and calibration statistics.
+
+Paper §3.3 adopts the LLM.int8() criterion: a channel (column of the
+activation matrix) is an outlier iff it contains at least one element with
+|x| > threshold (6.0 by default).
+
+Two operating modes:
+  * dynamic  — the mask is computed from the live activation (paper's
+               on-line criterion).  Mask-based, shape-static, jit-safe.
+  * static   — the mask/index-set is calibrated offline over sample batches
+               and frozen (TPU-native mode; see DESIGN.md §3.1).  Outlier
+               channels in LLMs are stable across inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_THRESHOLD = 6.0
+
+
+def outlier_mask(x: jnp.ndarray, threshold: float = DEFAULT_THRESHOLD) -> jnp.ndarray:
+    """Boolean mask over the channel (last) axis: True where the channel holds
+    any element with |x| > threshold."""
+    reduce_axes = tuple(range(x.ndim - 1))
+    return jnp.any(jnp.abs(x) > threshold, axis=reduce_axes)
+
+
+def channel_absmax(x: jnp.ndarray) -> jnp.ndarray:
+    """Per-channel abs-max over all leading axes."""
+    reduce_axes = tuple(range(x.ndim - 1))
+    return jnp.max(jnp.abs(x), axis=reduce_axes)
+
+
+def topk_outlier_mask(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Mask selecting the k channels with the largest abs-max (alternative
+    criterion when a fixed outlier budget is required)."""
+    amax = channel_absmax(x)
+    if k <= 0:
+        return jnp.zeros_like(amax, dtype=bool)
+    thresh = jnp.sort(amax)[-k]
+    return amax >= thresh
+
+
+@dataclasses.dataclass
+class ChannelStats:
+    """Running per-channel statistics for one quantized matmul site."""
+    absmax: np.ndarray  # [channels]
+    absmean: np.ndarray  # [channels] running mean of |x| (for SmoothQuant)
+    count: int = 0
+
+    @classmethod
+    def empty(cls, channels: int) -> "ChannelStats":
+        return cls(absmax=np.zeros(channels, np.float32),
+                   absmean=np.zeros(channels, np.float32), count=0)
+
+    def update(self, x: jnp.ndarray) -> None:
+        x2 = np.asarray(x, np.float32).reshape(-1, x.shape[-1])
+        self.absmax = np.maximum(self.absmax, np.abs(x2).max(axis=0))
+        n_new = x2.shape[0]
+        mean_new = np.abs(x2).mean(axis=0)
+        total = self.count + n_new
+        self.absmean = (self.absmean * self.count + mean_new * n_new) / max(total, 1)
+        self.count = total
+
+    def mask(self, threshold: float = DEFAULT_THRESHOLD, max_frac: float = 0.25) -> np.ndarray:
+        """Calibrated static outlier mask.  ``max_frac`` caps the outlier set
+        (a safety valve: if >25% of channels trip the threshold the activation
+        is simply large, not outlier-structured — fall back to the top
+        channels only)."""
+        m = self.absmax > threshold
+        k_cap = max(1, int(max_frac * len(self.absmax)))
+        if m.sum() > k_cap:
+            order = np.argsort(-self.absmax)
+            m = np.zeros_like(m)
+            m[order[:k_cap]] = True
+        return m
+
+
+class CalibrationStats:
+    """Dict of site-name -> ChannelStats, filled by a CollectCtx pass.
+
+    Serializable to/from npz so calibration is a one-off offline step.
+    """
+
+    def __init__(self) -> None:
+        self.sites: Dict[str, ChannelStats] = {}
+
+    def update(self, name: str, x: jnp.ndarray) -> None:
+        if name not in self.sites:
+            self.sites[name] = ChannelStats.empty(int(x.shape[-1]))
+        self.sites[name].update(x)
+
+    def masks(self, threshold: float = DEFAULT_THRESHOLD) -> Dict[str, np.ndarray]:
+        return {k: v.mask(threshold) for k, v in self.sites.items()}
+
+    def save(self, path: str) -> None:
+        flat = {}
+        for k, v in self.sites.items():
+            flat[f"{k}::absmax"] = v.absmax
+            flat[f"{k}::absmean"] = v.absmean
+            flat[f"{k}::count"] = np.asarray(v.count)
+        np.savez(path, **flat)
+
+    @classmethod
+    def load(cls, path: str) -> "CalibrationStats":
+        out = cls()
+        data = np.load(path)
+        names = sorted({k.split("::")[0] for k in data.files})
+        for name in names:
+            st = ChannelStats(absmax=data[f"{name}::absmax"],
+                              absmean=data[f"{name}::absmean"],
+                              count=int(data[f"{name}::count"]))
+            out.sites[name] = st
+        return out

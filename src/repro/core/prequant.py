@@ -1,0 +1,51 @@
+"""Offline weight pre-quantization (the deployment path).
+
+Transforms a params tree so every quantized-site weight leaf becomes
+{"q": int8, "s": f32 per-out-channel scales}.  The serving step then reads
+1 byte/weight from HBM and never runs the fp32 quantize pass — in the
+baseline decode roofline that pass dominated HBM traffic (EXPERIMENTS.md
+§Perf iteration 1).
+
+Embeddings / lm_head / norms / biases / router / conv / SSD params stay in
+their original dtype (they're outside the paper's target-layer set).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantizers as Q
+from repro.models.common import ModelConfig
+
+# site weight leaves eligible for offline int8 (matmul right-hand sides)
+_WEIGHT_RE = re.compile(
+    r"(attn/(wqkv|wo)|cross/(wq|wkv|wo)|mlp/(wi|wo)|moe/(wi|wo)"
+    r"|ssm/(in_zx|in_bcdt|out_proj))$")
+
+
+def prequantize_params(cfg: ModelConfig, params, weight_bits: int = 8):
+    """Returns a new tree with eligible weight leaves replaced by
+    {"q": int8 [...same shape], "s": f32 [..., 1, out]} dicts.
+
+    Works on stacked [L, ...] leaves: per-(layer, out-channel) scales.
+    """
+    def visit(path, leaf):
+        pathstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        if not _WEIGHT_RE.search(pathstr):
+            return leaf
+        # scale per (leading dims..., out-channel): reduce only the
+        # contraction axis (-2) so stacked [L, ...] leaves quantize per layer
+        amax = jnp.maximum(jnp.max(jnp.abs(leaf.astype(jnp.float32)),
+                                   axis=-2, keepdims=True), 1e-9)
+        s = amax / Q.qmax(weight_bits)
+        q, _ = Q.quantize(leaf, weight_bits, scale=s)
+        return {"q": q, "s": s.astype(jnp.float32)}
+
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+def prequant_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))

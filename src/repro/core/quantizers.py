@@ -1,0 +1,121 @@
+"""n-bit symmetric abs-max quantization primitives.
+
+Paper §2.1: abs-max quantization at per-tensor / per-vector granularity.
+All functions are pure jnp and jit-friendly.  ``bits`` is a static int in
+[2, 8]; INT levels span [-(2^(b-1)-1), +(2^(b-1)-1)] (symmetric, no -128).
+
+Granularity conventions for a 2-D matmul operand ``X[row, col]``:
+  * per_tensor : one scale for the whole tensor
+  * per_token  : one scale per row    (activations: one per token)
+  * per_channel: one scale per column (weights: one per output channel when
+                 applied to W[in, out] along axis 0 reduction)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Granularity = Literal["per_tensor", "per_token", "per_channel"]
+
+_EPS = 1e-9
+
+
+def qmax(bits: int) -> int:
+    """Largest representable magnitude at ``bits`` (symmetric)."""
+    return (1 << (bits - 1)) - 1
+
+
+def _reduce_axes(x: jnp.ndarray, granularity: Granularity) -> Optional[Tuple[int, ...]]:
+    """Axes over which abs-max is taken. ``None`` means all axes."""
+    if granularity == "per_tensor":
+        return None
+    if granularity == "per_token":
+        # one scale per leading-dims row: reduce over the last axis
+        return (x.ndim - 1,)
+    if granularity == "per_channel":
+        # one scale per trailing-dim column: reduce over all axes but the last
+        return tuple(range(x.ndim - 1))
+    raise ValueError(f"unknown granularity: {granularity}")
+
+
+def absmax_scale(x: jnp.ndarray, bits: int, granularity: Granularity = "per_tensor") -> jnp.ndarray:
+    """Scale factor s s.t. round(x / s) fits in ``bits`` (paper Eq. 1-2)."""
+    axes = _reduce_axes(x, granularity)
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=axes is not None)
+    amax = jnp.maximum(amax.astype(jnp.float32), _EPS)
+    return amax / qmax(bits)
+
+
+def quantize(
+    x: jnp.ndarray,
+    bits: int,
+    granularity: Granularity = "per_tensor",
+    scale: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x -> (x_int, scale). x_int is int8 for bits<=8 (values confined to
+    the ``bits`` grid), int32 otherwise."""
+    if scale is None:
+        scale = absmax_scale(x, bits, granularity)
+    q = qmax(bits)
+    xi = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -q, q)
+    dtype = jnp.int8 if bits <= 8 else jnp.int32
+    return xi.astype(dtype), scale
+
+
+def dequantize(xi: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return (xi.astype(jnp.float32) * scale).astype(dtype)
+
+
+def fake_quant(
+    x: jnp.ndarray,
+    bits: int,
+    granularity: Granularity = "per_tensor",
+    scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """quantize→dequantize in one shot (paper §4.3 'fake quantization').
+
+    Output dtype matches input dtype.
+    """
+    xi, s = quantize(x, bits, granularity, scale=scale)
+    return dequantize(xi, s, dtype=x.dtype)
+
+
+def int_matmul(xi: jnp.ndarray, wi: jnp.ndarray) -> jnp.ndarray:
+    """INT8xINT8 -> INT32 matmul (the uniform-precision GEMM MUXQ targets).
+
+    On TPU this lowers to MXU int8 ops at 2x bf16 throughput.
+    """
+    return jax.lax.dot_general(
+        xi, wi,
+        dimension_numbers=(((xi.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def quantized_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    act_bits: int = 8,
+    weight_bits: int = 8,
+    act_granularity: Granularity = "per_token",
+    weight_granularity: Granularity = "per_channel",
+    out_dtype=None,
+) -> jnp.ndarray:
+    """Real quantize→INT-compute→dequantize pipeline (paper Eq. 3).
+
+    Y = s_X * s_W * (X_int @ W_int)
+    """
+    out_dtype = out_dtype or x.dtype
+    xi, sx = quantize(x, act_bits, act_granularity)
+    wi, sw = quantize(w, weight_bits, weight_granularity)
+    yi = int_matmul(xi, wi)
+    # sx broadcasts over rows, sw over columns.
+    return (yi.astype(jnp.float32) * sx * sw).astype(out_dtype)
+
+
+def quant_error(x: jnp.ndarray, bits: int, granularity: Granularity = "per_tensor") -> jnp.ndarray:
+    """Mean-squared fake-quantization error — used by Fig.3-style analyses."""
+    return jnp.mean((fake_quant(x, bits, granularity) - x) ** 2)

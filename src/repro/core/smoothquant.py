@@ -1,0 +1,40 @@
+"""SmoothQuant difficulty migration (Xiao et al. 2023), used both as a
+baseline and composed with MUXQ (paper §5: 'can be readily combined').
+
+Per input channel j:  s_j = max|X_j|^alpha / max|W_j|^(1-alpha)
+then  X' = X / s,  W' = s * W  — mathematically exact, but X' has a flatter
+channel profile so abs-max quantization hurts less.
+
+``smooth`` passed to :func:`apply_smoothing` is the *calibrated activation
+per-channel abs-max* (from ``outliers.CalibrationStats``); the weight side is
+computed live from W (static at trace time).  When no calibration is
+available we fall back to the live activation abs-max (still exact).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+_EPS = 1e-5
+
+
+def smoothing_factors(act_absmax: jnp.ndarray, w: jnp.ndarray, alpha: float = 0.5) -> jnp.ndarray:
+    w_absmax = jnp.max(jnp.abs(w), axis=tuple(range(1, w.ndim)))  # per input-channel (row of W)
+    a = jnp.maximum(act_absmax.astype(jnp.float32), _EPS)
+    b = jnp.maximum(w_absmax.astype(jnp.float32), _EPS)
+    s = (a ** alpha) / (b ** (1.0 - alpha))
+    return jnp.maximum(s, _EPS)
+
+
+def apply_smoothing(x: jnp.ndarray, w: jnp.ndarray,
+                    act_absmax: Optional[jnp.ndarray],
+                    alpha: float = 0.5) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Return (X/s, s*W).  Exact: (X/s)(sW) == XW."""
+    if act_absmax is None:
+        reduce_axes = tuple(range(x.ndim - 1))
+        act_absmax = jnp.max(jnp.abs(x), axis=reduce_axes)
+    s = smoothing_factors(act_absmax, w, alpha)
+    x_s = (x / s).astype(x.dtype)
+    w_s = (w * s[:, None] if w.ndim == 2 else w * s).astype(w.dtype)
+    return x_s, w_s

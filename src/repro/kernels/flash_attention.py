@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: flash-attention forward (causal, GQA, optional
+sliding window + gemma2 softcap) — the prefill-path hot spot.
+
+Online-softmax tiling: grid (batch, q_head, Sq/bq, Sk/bk) with the KV dim
+innermost ("arbitrary"); VMEM scratch carries the running max m, denom l,
+and the un-normalized accumulator.  GQA rides in the index maps: q head h
+reads kv head h // (H/KV) — the broadcast KV never materializes (the same
+trick as models/attention.sdpa, but tiled for VMEM).
+
+VMEM @ defaults (bq=bk=128, dh<=256): q 64 KiB + k/v 128 KiB + acc 128 KiB
+f32 — comfortably under budget; all tile dims 128-aligned for the MXU.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, nk: int, bq: int, bk: int, causal: bool,
+            window: Optional[int], softcap: Optional[float]):
+    i, j = pl.program_id(2), pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # [bq, dh]
+    k = k_ref[0, 0].astype(jnp.float32)                 # [bk, dh]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    allow = jnp.ones((bq, bk), bool)
+    if causal:
+        allow &= kpos <= qpos
+    if window is not None:
+        allow &= kpos > qpos - window
+    s = jnp.where(allow, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # [bq, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                               # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                      # rescale factor
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    softcap: Optional[float] = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q [b, sq, h, dh], k/v [b, sk, kv, dh] (kv | h) -> [b, sq, h, dh]."""
+    b, sq, h, dh = q.shape
+    _, sk, kv, _ = k.shape
+    assert h % kv == 0
+    g = h // kv
+    bq = min(bq, sq)
+    bk = min(bk, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    scale = dh ** -0.5
+
+    qt = q.transpose(0, 2, 1, 3)                         # [b, h, sq, dh]
+    kt = k.transpose(0, 2, 1, 3)                         # [b, kv, sk, dh]
+    vt = v.transpose(0, 2, 1, 3)
+    nk = sk // bk
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, nk=nk, bq=bq, bk=bk,
+                          causal=causal, window=window, softcap=softcap),
+        grid=(b, h, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda bb, hh, i, j: (bb, hh, i, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda bb, hh, i, j, g=g: (bb, hh // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda bb, hh, i, j, g=g: (bb, hh // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda bb, hh, i, j: (bb, hh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, sq, dh), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,133 @@
+"""jit'd public wrappers around the Pallas kernels with channel permutation
+and jnp fallback.
+
+``muxq_linear`` is the end-to-end deployable op: given a calibrated outlier
+mask it (offline) permutes channels so outliers form contiguous K-blocks,
+pre-quantizes the weight, and (online) quantizes activations per-token and
+runs the fused block-scaled INT8 GEMM.  On CPU (tests/this container) the
+kernels run in interpret mode or fall back to the jnp oracle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantizers as Q
+from repro.kernels import ref
+from repro.kernels.muxq_gemm import muxq_gemm
+from repro.kernels.quantize import rowwise_quantize
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@dataclasses.dataclass
+class MuxqWeights:
+    """Offline-prepared weights for one linear layer."""
+    w_int: jnp.ndarray          # [K_pad, N] int8 (outlier rows first)
+    sw: jnp.ndarray             # [1, N] f32 per-out-channel scales
+    perm: jnp.ndarray           # [K] channel permutation applied to inputs
+    block_scale: jnp.ndarray    # [K_pad/bk] int32: 2^exp on outlier blocks
+    bk: int
+    k_orig: int                 # pre-padding channel count
+    pad_out: int                # zero channels inserted after the outliers
+    pad_tail: int               # zero channels appended at the end
+    n_out: int = 0              # outlier channel count (static: jit-safe)
+
+
+def prepare_weights(w: jnp.ndarray, outlier_mask: np.ndarray, exp_factor: int,
+                    bk: int = 512, weight_bits: int = 8) -> MuxqWeights:
+    """Offline step: permute outlier channels to the front and ZERO-PAD the
+    outlier run up to a bk multiple.  Padding (not weight-side 2^-e
+    compensation) keeps normal channels out of the x2^e blocks — scaling a
+    normal channel down/up would amplify its quantization error 2^e-fold.
+    Cost: <= bk-1 zero channels (~one extra K tile)."""
+    k = w.shape[0]
+    bk = min(bk, k)
+    mask = np.asarray(outlier_mask, bool)
+    idx_out = np.nonzero(mask)[0]
+    idx_norm = np.nonzero(~mask)[0]
+    perm = np.concatenate([idx_out, idx_norm])
+    n_out = len(idx_out)
+    pad_out = (-n_out) % bk if n_out else 0
+    n_blocks_out = (n_out + pad_out) // bk
+    pad_tail = (-(k + pad_out)) % bk
+
+    w_perm = np.asarray(w, np.float32)[perm]
+    w_padded = np.concatenate(
+        [w_perm[:n_out], np.zeros((pad_out, w.shape[1]), np.float32),
+         w_perm[n_out:], np.zeros((pad_tail, w.shape[1]), np.float32)])
+    k_pad = k + pad_out + pad_tail
+    assert k_pad % bk == 0
+    block_scale = np.ones(k_pad // bk, np.int32)
+    block_scale[:n_blocks_out] = 2 ** exp_factor
+
+    w_int, sw = Q.quantize(jnp.asarray(w_padded), weight_bits, "per_channel")
+    return MuxqWeights(w_int=w_int, sw=sw.reshape(1, -1),
+                       perm=jnp.asarray(perm), block_scale=jnp.asarray(block_scale),
+                       bk=bk, k_orig=k, pad_out=pad_out, pad_tail=pad_tail,
+                       n_out=n_out)
+
+
+
+
+def _permute_pad_shift(x2: jnp.ndarray, mw: MuxqWeights, exp_factor: int) -> jnp.ndarray:
+    """Online Body construction: permute channels (outliers first), insert
+    the zero padding, shift the outlier run down by 2^e (paper Eq. 4)."""
+    # static ints (never derive from closed-over arrays: jit would trace them)
+    n_out = mw.n_out
+    covered = n_out + mw.pad_out
+    xp = x2[:, mw.perm]
+    parts = [xp[:, :n_out]]
+    if mw.pad_out:
+        parts.append(jnp.zeros((x2.shape[0], mw.pad_out), x2.dtype))
+    parts.append(xp[:, n_out:])
+    if mw.pad_tail:
+        parts.append(jnp.zeros((x2.shape[0], mw.pad_tail), x2.dtype))
+    xp = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+    scale_vec = jnp.where(jnp.arange(xp.shape[1]) < covered,
+                          2.0 ** (-exp_factor), 1.0)
+    return (xp * scale_vec).astype(x2.dtype)
+
+
+def muxq_linear(x: jnp.ndarray, mw: MuxqWeights, exp_factor: int,
+                act_bits: int = 8, interpret: Optional[bool] = None,
+                out_dtype=None) -> jnp.ndarray:
+    """Online path: permute -> scale outlier block down -> per-token int8
+    quantize -> fused block-scaled GEMM."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    body = _permute_pad_shift(x.reshape(-1, k), mw, exp_factor)
+
+    m = body.shape[0]
+    pad_m = (-m) % 8
+    if pad_m:
+        body = jnp.pad(body, ((0, pad_m), (0, 0)))
+    x_int, sx = rowwise_quantize(body, bits=act_bits, bm=min(128, body.shape[0]),
+                                 interpret=interpret)
+    y = muxq_gemm(x_int, mw.w_int, mw.block_scale, sx, mw.sw,
+                  bm=min(256, body.shape[0]), bk=mw.bk,
+                  out_dtype=jnp.float32, interpret=interpret)
+    if pad_m:
+        y = y[:m]
+    return y.reshape(*lead, -1).astype(out_dtype)
+
+
+def muxq_linear_ref(x: jnp.ndarray, mw: MuxqWeights, exp_factor: int,
+                    act_bits: int = 8, out_dtype=None) -> jnp.ndarray:
+    """Same math via the jnp oracle (for tests / CPU serving)."""
+    out_dtype = out_dtype or x.dtype
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    body = _permute_pad_shift(x.reshape(-1, k), mw, exp_factor)
+    x_int, sx = ref.rowwise_quantize_ref(body, act_bits)
+    y = ref.muxq_gemm_ref(x_int, mw.w_int, mw.block_scale, sx, mw.sw, mw.bk)
+    return y.reshape(*lead, -1).astype(out_dtype)

@@ -1,0 +1,76 @@
+"""Pure-jnp oracles for every Pallas kernel (the paper-faithful math)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import quantizers as Q
+
+
+def rowwise_quantize_ref(x: jnp.ndarray, bits: int = 8):
+    """Per-row (per-token) abs-max quantization: x [M, K] -> (int8 [M, K],
+    scales f32 [M, 1])."""
+    return Q.quantize(x, bits, granularity="per_token")
+
+
+def muxq_gemm_ref(x_int: jnp.ndarray, w_int: jnp.ndarray,
+                  block_scale: jnp.ndarray, sx: jnp.ndarray, sw: jnp.ndarray,
+                  block_k: int, out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for the fused MUXQ GEMM (paper Eq. 7 in TPU-native form).
+
+    The outlier channels are pre-permuted into contiguous K-blocks;
+    ``block_scale[kb]`` is 2^exp for outlier blocks, 1 elsewhere.  The paper's
+    two-GEMM body+aux form with shared scales is algebraically identical:
+
+        Y = (Body@W + (2^e-1)*(Aux@W)) * sx*sw
+          = sum_kb block_scale[kb] * (X_int[:,kb] @ W_int[kb,:]) * sx*sw
+    """
+    m, k = x_int.shape
+    n = w_int.shape[1]
+    nb = k // block_k
+    xb = x_int.reshape(m, nb, block_k).astype(jnp.int32)
+    wb = w_int.reshape(nb, block_k, n).astype(jnp.int32)
+    per_block = jnp.einsum("mbk,bkn->bmn", xb, wb)          # int32
+    acc = jnp.sum(per_block * block_scale[:, None, None], axis=0)
+    return (acc.astype(jnp.float32) * sx * sw).astype(out_dtype)
+
+
+def muxq_gemm_two_matmul_ref(x_int, w_int, block_scale, sx, sw, block_k,
+                             out_dtype=jnp.float32):
+    """The literal paper form: Y_body + (2^e - 1) * Y_aux with Aux =
+    Body_outlier (same integer representation, shared scales)."""
+    k = x_int.shape[0] if x_int.ndim == 1 else x_int.shape[1]
+    mask_k = jnp.repeat(block_scale > 1, block_k)            # outlier channels
+    scale_k = jnp.repeat(block_scale, block_k).astype(jnp.int32)
+    y_body = (x_int.astype(jnp.int32) @ w_int.astype(jnp.int32))
+    aux = jnp.where(mask_k[None, :], x_int.astype(jnp.int32), 0)
+    y_aux_scaled = (aux * (scale_k - 1)[None, :]) @ w_int.astype(jnp.int32)
+    return ((y_body + y_aux_scaled).astype(jnp.float32) * sx * sw).astype(out_dtype)
+
+
+def flash_attention_ref(q, w_unused=None, *, k=None, v=None, causal=True,
+                        window=None, softcap=None):
+    """Oracle for kernels/flash_attention.py: plain softmax attention with
+    GQA broadcast, computed in f32."""
+    import jax
+    if k is None or v is None:
+        raise ValueError("pass k= and v=")
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kf) * (dh ** -0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    allow = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        allow &= kpos <= qpos
+    if window is not None:
+        allow &= kpos > qpos - window
+    s = jnp.where(allow[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, vf)
+    return o.reshape(b, sq, h, dh).astype(q.dtype)

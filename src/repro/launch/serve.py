@@ -1,0 +1,48 @@
+"""Serving launcher: load (or train a tiny) model, calibrate MUXQ, serve a
+batch of prompts through the engine."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.core.calibrate import calibrate
+from repro.core.muxq import QuantConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="gpt2-small")
+    ap.add_argument("--quant", default="muxq",
+                    choices=["fp", "naive", "muxq", "llm_int8", "smoothquant"])
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompts", nargs="*",
+                    default=["the model computes", "a kernel shards"])
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+    quant = None
+    masks = {}
+    if args.quant != "fp":
+        quant = QuantConfig(method=args.quant, act_granularity="per_token",
+                            outlier_mode="static")
+        pipe = TokenPipeline(PipelineConfig(seq_len=64, global_batch=2))
+        fwd = lambda p, b, ctx: T.forward(cfg, p, b["tokens"], ctx, scan=False)
+        _, masks, _ = calibrate(fwd, params, [next(pipe) for _ in range(2)])
+
+    engine = ServeEngine(cfg, params, max_batch=2, s_max=128, quant=quant)
+    reqs = [Request(p, max_new_tokens=args.max_new) for p in args.prompts]
+    engine.generate(reqs)
+    for r in reqs:
+        print(f"{r.prompt!r} -> {ServeEngine.text(r)!r} ({len(r.out_tokens)} tokens)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,121 @@
+"""jit-able train / prefill / serve step builders with full sharding specs.
+
+These are what the launcher runs and what the dry-run lowers.  MUXQ is a
+first-class feature: pass a QuantConfig to run the quantized inference path
+(static calibrated masks via ``qparams``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import FpCtx, QuantCtx
+from repro.core.muxq import QuantConfig
+from repro.models import transformer as T
+from repro.models.attention import init_cache, n_attn_layers
+from repro.models.common import ModelConfig
+from repro.models.ssm import init_ssm_state
+from repro.optim import adamw
+
+
+def _ctx_for(quant: Optional[QuantConfig]):
+    return FpCtx() if quant is None or quant.method == "fp" else QuantCtx(quant)
+
+
+def make_train_step(cfg: ModelConfig, acfg: Optional[adamw.AdamWConfig] = None,
+                    quant: Optional[QuantConfig] = None, qparams=None,
+                    scan: bool = True, cast_bf16: bool = False):
+    """``cast_bf16``: convert fp32 master params to bf16 BEFORE the layer
+    scan, so FSDP weight all-gathers (fwd + remat + bwd) and the gradient
+    reductions move bf16, not fp32 — halves the collective term on
+    FSDP-dominated train cells (EXPERIMENTS.md §Perf qwen1.5-110b)."""
+    acfg = acfg or adamw.AdamWConfig()
+    ctx = _ctx_for(quant)
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            if cast_bf16:
+                p = jax.tree.map(
+                    lambda x: x.astype(jnp.bfloat16)
+                    if x.dtype == jnp.float32 else x, p)
+            return T.lm_loss(cfg, p, batch, ctx=ctx, scan=scan, qparams=qparams)
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params, new_state, metrics = adamw.apply_updates(acfg, params, grads, opt_state)
+        metrics.update(loss=loss, ce=parts["ce"], aux=parts["aux"])
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, quant: Optional[QuantConfig] = None,
+                   qparams=None, scan: bool = True):
+    ctx = _ctx_for(quant)
+
+    def eval_step(params, batch):
+        loss, parts = T.lm_loss(cfg, params, batch, ctx=ctx, scan=scan,
+                                qparams=qparams)
+        return parts["ce"]
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig, seq_len: int,
+                      quant: Optional[QuantConfig] = None, qparams=None,
+                      kv_dtype=jnp.bfloat16, scan: Optional[bool] = None):
+    """Full-sequence prefill: builds the KV cache in-step and returns the
+    first sampled token + the cache."""
+    ctx = _ctx_for(quant)
+    if scan is None:
+        scan = cfg.family != "hybrid"
+    scan = scan and cfg.family != "hybrid"
+    # VLM: patch embeddings prepend to the text tokens and occupy cache slots
+    s_max = seq_len + cfg.n_patches
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        extra = {k: batch[k] for k in ("patches", "frames") if k in batch}
+        fam = cfg.family
+        if fam in ("dense", "moe", "encdec"):
+            cache = init_cache(cfg, b, s_max, dtype=kv_dtype)
+        elif fam == "ssm":
+            cache = init_ssm_state(cfg, b, cfg.n_layers)
+            cache["pos"] = jnp.asarray(0, jnp.int32)
+        else:
+            cache = init_ssm_state(cfg, b, cfg.n_layers)
+            kvc = init_cache(cfg, b, s_max, dtype=kv_dtype,
+                             layers=n_attn_layers(cfg))
+            cache.update({"k": kvc["k"], "v": kvc["v"],
+                          "pos": jnp.asarray(0, jnp.int32)})
+        out = T.forward(cfg, params, tokens, ctx, extra=extra or None,
+                        scan=scan, cache=cache, qparams=qparams)
+        next_tok = jnp.argmax(out["logits"][:, -1, : cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), out["cache"]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, quant: Optional[QuantConfig] = None,
+                    qparams=None, scan: Optional[bool] = None):
+    """One-token decode against the cache (the decode_* / long_* cells)."""
+    ctx = _ctx_for(quant)
+    if scan is None:
+        scan = True
+    use_scan = scan and cfg.family != "hybrid"
+
+    def serve_step(params, batch):
+        tokens, cache = batch["tokens"], batch["cache"]
+        logits, new_cache = T.decode_step(cfg, params, tokens, cache, ctx,
+                                          qparams=qparams, scan=use_scan)
+        next_tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+
+    return serve_step
+
+
+MUXQ_SERVE = QuantConfig(method="muxq", real_int8=True, muxq_form="fused",
+                         outlier_mode="static", act_granularity="per_token",
+                         weight_granularity="per_channel", exp_factor=2)

@@ -1,0 +1,47 @@
+"""Training launcher: --arch <id> [--reduced] with auto-resume.
+
+CPU-scale by default; on a real cluster the same step function is jitted
+with the production mesh shardings (launch/dryrun.py proves every cell
+compiles at 16x16 and 2x16x16).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.configs import get_config
+from repro.data.pipeline import PipelineConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import TrainConfig, Trainer
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="gpt2-small")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--no-resume", dest="resume", action="store_false")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    trainer = Trainer(
+        cfg,
+        TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                    ckpt_every=args.ckpt_every, resume=args.resume),
+        PipelineConfig(seq_len=args.seq_len, global_batch=args.batch),
+        AdamWConfig(lr=args.lr, total_steps=args.steps, warmup_steps=min(20, args.steps // 5)),
+    )
+    out = trainer.run(on_step=lambda s, m: print(
+        f"step {s:5d} loss {m['loss']:.4f} lr {m['lr']:.2e}", flush=True))
+    print(f"done: {out['steps']} steps, final loss {out['final_loss']:.4f}, "
+          f"{out['wall_s']:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

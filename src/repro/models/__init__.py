@@ -1,0 +1,3 @@
+"""Model zoo: one stack, five families (dense/moe/ssm/hybrid/encdec)."""
+from repro.models.common import ModelConfig  # noqa: F401
+from repro.models.transformer import init_params, forward, decode_step, lm_loss  # noqa: F401

@@ -1,0 +1,213 @@
+"""GQA attention with the features the assigned archs need:
+
+  * grouped-query attention (n_kv_heads <= n_heads), fused QKV projection
+  * optional QKV bias (qwen family)
+  * sliding-window "local" blocks + attention-logit softcap (gemma2)
+  * RoPE
+  * full forward (train / prefill, optionally emitting a KV cache) and a
+    single-token decode step against a preallocated cache
+  * cross-attention (whisper decoder)
+
+All projections run through the quantization ctx (paper's c_attn / c_proj
+target set).  ``sq`` is the per-layer site-quant dict {site: outlier mask}
+so static MUXQ masks flow through ``lax.scan``.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, apply_rope, dense_init, softcap
+from repro.parallel.act_sharding import cache_update_mode
+
+NEG_INF = -1e9
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
+    h, kv, dh, d = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cross:
+        p = {
+            "wq": dense_init(k1, (d, h * dh)),
+            "wkv": dense_init(k2, (d, 2 * kv * dh)),
+            "wo": dense_init(k3, (h * dh, d), fan_in=h * dh),
+        }
+    else:
+        p = {
+            "wqkv": dense_init(k1, (d, (h + 2 * kv) * dh)),
+            "wo": dense_init(k2, (h * dh, d), fan_in=h * dh),
+        }
+        if cfg.qkv_bias:
+            p["bqkv"] = jnp.zeros(((h + 2 * kv) * dh,), jnp.float32)
+    return p
+
+
+def _split_qkv(cfg: ModelConfig, qkv: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = qkv.shape
+    q = qkv[..., : h * dh].reshape(b, s, h, dh)
+    k = qkv[..., h * dh: (h + kv) * dh].reshape(b, s, kv, dh)
+    v = qkv[..., (h + kv) * dh:].reshape(b, s, kv, dh)
+    return q, k, v
+
+
+def sdpa(cfg: ModelConfig, q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+         bias: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Grouped-query softmax(QK^T/sqrt(d) [softcap] + bias) V.
+
+    q [b, sq, h, dh];  k/v [b, sk, kv, dh] (UNrepeated — the group dim rides
+    inside the einsum so the broadcast KV is never materialized; at kv=8,
+    h=48 the repeat would 6x the cache read traffic)."""
+    b, sq_, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq_, kv, g, dh)
+    scale = cfg.head_dim ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    scores = softcap(scores, cfg.attn_softcap)
+    if bias is not None:
+        scores = scores + bias[:, :, None]    # [..., sq, sk] -> group-dim bcast
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq_, h, dh)
+
+
+def causal_bias(sq: int, sk: int, window: int, window_flag,
+                q_offset: int = 0) -> jnp.ndarray:
+    """[1, 1, sq, sk] additive mask.  ``window_flag`` (python bool or traced
+    scalar — scan-friendly) selects sliding-window locality; ``q_offset``
+    places the query block inside a longer key range (decode: sq=1,
+    q_offset=cache position)."""
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(sk)[None, :]
+    causal = kpos <= qpos
+    in_window = kpos > qpos - window
+    allow = causal & (in_window | ~jnp.asarray(window_flag))
+    return jnp.where(allow, 0.0, NEG_INF)[None, None].astype(jnp.float32)
+
+
+def attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+              positions: jnp.ndarray, *, window_flag=False,
+              sq: Optional[Dict] = None,
+              cache: Optional[dict] = None,
+              causal: bool = True) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence attention.  If ``cache`` is a dict of preallocated
+    [b, s_max, kv, dh] buffers, writes K/V at positions [0, s) and returns
+    the updated cache (prefill)."""
+    sq = sq or {}
+    b, s, d = x.shape
+    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"))
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"].astype(x.dtype)
+    q, k, v = _split_qkv(cfg, qkv)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        cache["pos"] = jnp.asarray(s, jnp.int32)
+
+    bias = causal_bias(s, s, cfg.window_size, window_flag) if causal else None
+    o = sdpa(cfg, q, k, v, bias)
+    o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
+    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"))
+    return out, cache
+
+
+def attention_decode(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+                     cache: dict, *, window_flag=False,
+                     sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode: x [b, 1, d]; cache k/v [b, s_max, kv, dh] + pos."""
+    sq = sq or {}
+    b, one, d = x.shape
+    pos = cache["pos"]
+    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"))
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"].astype(x.dtype)
+    q, k, v = _split_qkv(cfg, qkv)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    int8_kv = "k_scale" in cache
+    if int8_kv:
+        # INT8 KV cache (Oaken-style; paper §1 KV-memory motivation): store
+        # int8 + per-(pos, head) scales; 2x capacity, ~2x decode read traffic
+        from repro.serve.kvcache import quantize_kv
+        qkv_new = quantize_kv(k, v)
+        k_w, v_w = qkv_new["k"], qkv_new["v"]
+        ks_w, vs_w = qkv_new["k_scale"], qkv_new["v_scale"]
+    else:
+        k_w, v_w = k, v
+
+    if cache_update_mode() == "select":
+        # elementwise write (shard-local under seq-sharded caches)
+        sel = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None, None]
+        ck = jnp.where(sel, k_w.astype(cache["k"].dtype), cache["k"])
+        cv = jnp.where(sel, v_w.astype(cache["v"].dtype), cache["v"])
+        if int8_kv:
+            cks = jnp.where(sel, ks_w, cache["k_scale"])
+            cvs = jnp.where(sel, vs_w, cache["v_scale"])
+    else:
+        dus = jax.lax.dynamic_update_slice
+        ck = dus(cache["k"], k_w.astype(cache["k"].dtype), (0, pos, 0, 0))
+        cv = dus(cache["v"], v_w.astype(cache["v"].dtype), (0, pos, 0, 0))
+        if int8_kv:
+            cks = dus(cache["k_scale"], ks_w, (0, pos, 0, 0))
+            cvs = dus(cache["v_scale"], vs_w, (0, pos, 0, 0))
+    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
+    if int8_kv:
+        new_cache.update(k_scale=cks, v_scale=cvs)
+        kk = (ck.astype(jnp.float32) * cks).astype(x.dtype)
+        vv = (cv.astype(jnp.float32) * cvs).astype(x.dtype)
+    else:
+        kk = ck.astype(x.dtype)
+        vv = cv.astype(x.dtype)
+    s_max = ck.shape[1]
+    kpos = jnp.arange(s_max)
+    in_window = kpos > pos - cfg.window_size
+    allow = (kpos <= pos) & (in_window | ~jnp.asarray(window_flag))
+    bias = jnp.where(allow, 0.0, NEG_INF)[None, None, None, :].astype(jnp.float32)
+    o = sdpa(cfg, q, kk, vv, bias)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"))
+    return out, new_cache
+
+
+def cross_attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+                    memory: jnp.ndarray, sq: Optional[Dict] = None) -> jnp.ndarray:
+    """Whisper-style cross attention: queries from decoder x, keys/values
+    from encoder memory.  No causal mask, no RoPE on memory."""
+    sq = sq or {}
+    b, s, d = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = ctx("cross_q", x, p["wq"], mask=sq.get("cross_q"))
+    kvm = ctx("cross_kv", memory, p["wkv"], mask=sq.get("cross_kv"))
+    sm = memory.shape[1]
+    q = q.reshape(b, s, h, dh)
+    k = kvm[..., : kv * dh].reshape(b, sm, kv, dh)
+    v = kvm[..., kv * dh:].reshape(b, sm, kv, dh)
+    o = sdpa(cfg, q, k, v, None).reshape(b, s, h * dh)
+    return ctx("cross_out", o, p["wo"], mask=sq.get("cross_out"))
+
+
+def n_attn_layers(cfg: ModelConfig) -> int:
+    """Number of KV-cache-bearing attention invocations in the stack."""
+    if cfg.shared_attn_every:   # zamba2: shared weights, per-site caches
+        return sum(1 for i in range(cfg.n_layers)
+                   if i % cfg.shared_attn_every == cfg.shared_attn_every - 1)
+    return sum(1 for b in cfg.blocks if b in ("attn", "local", "global", "moe"))
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=jnp.bfloat16,
+               layers: Optional[int] = None) -> dict:
+    """Preallocated per-layer KV cache (stacked leading layer dim for scan)."""
+    kv, dh = cfg.n_kv_heads, cfg.head_dim
+    n_attn = layers if layers is not None else n_attn_layers(cfg)
+    shape = (n_attn, batch, s_max, kv, dh)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.asarray(0, jnp.int32)}

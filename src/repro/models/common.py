@@ -1,0 +1,216 @@
+"""Shared model substrate: config, norms, rotary embeddings, losses.
+
+One ModelConfig covers every assigned architecture (dense / MoE / SSM /
+hybrid / enc-dec / VLM-backbone).  Block composition is expressed as a
+``block_pattern`` — a short cycle of block kinds tiled over ``n_layers``
+(e.g. gemma2's ("local", "global"), zamba2's five mamba blocks then a
+shared-attention checkpoint).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_vocab(vocab: int, multiple: int = 128) -> int:
+    """Pad vocab so embedding/vocab dims divide every mesh axis (Megatron
+    convention).  Logits over pad ids are masked to -inf in the loss."""
+    return ((vocab + multiple - 1) // multiple) * multiple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # block composition — cycle tiled over n_layers
+    block_pattern: Tuple[str, ...] = ("attn",)   # attn|local|global|moe|mamba
+
+    # attention
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None         # gemma2: 50.0
+    final_softcap: Optional[float] = None        # gemma2: 30.0
+    window_size: int = 4096                      # for "local" blocks
+    rope_theta: float = 10000.0
+
+    # mlp
+    mlp_type: str = "swiglu"                     # swiglu|gelu
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    shared_expert: bool = False                  # llama4-style shared expert
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    # zamba2-style shared attention block applied every k mamba blocks
+    shared_attn_every: int = 0
+
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    n_audio_frames: int = 1500
+    # vlm (internvl2) — patch embeds prepended to token embeds
+    n_patches: int = 0
+
+    norm: str = "rmsnorm"                        # rmsnorm|layernorm
+    norm_eps: float = 1e-5
+    sandwich_norm: bool = False                  # gemma2 pre+post sublayer norms
+    scale_embed: bool = False                    # gemma2 sqrt(d) embed scaling
+    tie_embeddings: bool = True
+    dtype: str = "float32"                       # compute dtype
+    remat: bool = False                          # activation checkpointing
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return pad_vocab(self.vocab_size)
+
+    @property
+    def d_inner(self) -> int:                    # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def blocks(self) -> Tuple[str, ...]:
+        """The full per-layer kind sequence (pattern tiled to n_layers)."""
+        pat = self.block_pattern
+        return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+
+    @property
+    def is_enc_dec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def family(self) -> str:
+        """dense | moe | ssm | hybrid | encdec — selects the stack body."""
+        if self.is_enc_dec:
+            return "encdec"
+        if self.shared_attn_every:
+            return "hybrid"
+        kinds = set(self.blocks)
+        if kinds == {"mamba"}:
+            return "ssm"
+        if "moe" in kinds:
+            return "moe"
+        return "dense"
+
+    @property
+    def is_subquadratic(self) -> bool:
+        """True iff no block kind has an unbounded dense KV cache — the
+        long_500k eligibility rule (DESIGN.md §5)."""
+        quadratic = {"attn", "global", "moe"}
+        if self.shared_attn_every:      # zamba2 shared attn: bounded by design
+            pass
+        return not any(b in quadratic for b in self.blocks)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + gain.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jnp.ndarray, gain: jnp.ndarray, bias: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * gain + bias).astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["gain"], cfg.norm_eps)
+    return layernorm(x, p["gain"], p["bias"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig, d: int) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"gain": jnp.zeros((d,), jnp.float32)}
+    return {"gain": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    freqs = rope_freqs(x.shape[-1], theta)                      # [hd/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., seq, hd/2]
+    cos = jnp.cos(angles)[..., None, :]                          # [..., seq, 1, hd/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab_size: int, mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Token-mean CE.  ``vocab_size`` is the real vocab; padded logit columns
+    are excluded from the normalizer."""
+    logits = logits.astype(jnp.float32)
+    pad = logits.shape[-1] - vocab_size
+    if pad > 0:
+        neg = jnp.full((pad,), -1e9, jnp.float32)
+        logits = logits.at[..., vocab_size:].set(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape: Sequence[int], fan_in: Optional[int] = None) -> jnp.ndarray:
+    fan_in = fan_in or shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std)

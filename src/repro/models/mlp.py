@@ -1,0 +1,35 @@
+"""Dense MLP blocks (SwiGLU / GELU), all projections quantization-aware."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    if cfg.mlp_type == "swiglu":
+        return {"wi": dense_init(k1, (d, 2 * f)), "wo": dense_init(k2, (f, d), fan_in=f)}
+    return {"wi": dense_init(k1, (d, f)), "wo": dense_init(k2, (f, d), fan_in=f),
+            "bi": jnp.zeros((f,), jnp.float32), "bo": jnp.zeros((d,), jnp.float32)}
+
+
+def mlp(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+        sq: Optional[Dict] = None) -> jnp.ndarray:
+    sq = sq or {}
+    h = ctx("mlp_up", x, p["wi"], mask=sq.get("mlp_up"))
+    if cfg.mlp_type == "swiglu":
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        if "bi" in p:
+            h = h + p["bi"].astype(x.dtype)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    out = ctx("mlp_down", h, p["wo"], mask=sq.get("mlp_down"))
+    if "bo" in p:
+        out = out + p["bo"].astype(x.dtype)
+    return out

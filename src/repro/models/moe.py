@@ -1,0 +1,160 @@
+"""Mixture-of-Experts block (llama4-scout 16e top-1 + shared expert,
+dbrx 16e top-4) with GShard-style grouped dispatch.
+
+Scale design (DESIGN.md §4 EP, EXPERIMENTS.md §Perf iteration dbrx/prefill):
+  * Tokens are routed within GROUPS (= sequences, i.e. the batch dim), each
+    group with its own capacity C = ceil(top_k * s / E * factor).  All
+    sorting / position bookkeeping / gather / scatter is then *local to the
+    data shard* — a global-argsort formulation makes GSPMD replicate the
+    token permutation across the mesh (measured 15.8 TB/device of
+    all-reduce on dbrx prefill_32k; the grouped form leaves only the
+    expert-parallel all-to-all moving the [g, e, C, d] buffer to the
+    'model' shards).
+  * The dispatch buffer is [g, e, C, d]: g over ('pod','data'), e over
+    'model' (expert parallelism).  No [T, E, C] one-hot tensor.
+  * Over-capacity tokens are dropped per group (pass through the residual),
+    standard for capacity-based routing.
+  * Router stays in fp32 (tiny); expert FFN matmuls run through the
+    quantization ctx (``ctx.emm``) so MUXQ applies per-expert.
+  * Aux load-balance loss (Switch-style) is returned for the trainer.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+from repro.models.mlp import init_mlp, mlp
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(k1, (d, e)),
+        "wi": dense_init(k2, (e, d, 2 * f)),
+        "wo": dense_init(k3, (e, f, d), fan_in=f),
+    }
+    if cfg.shared_expert:
+        p["shared"] = init_mlp(k4, cfg)
+    return p
+
+
+def _capacity(cfg: ModelConfig, n_tokens: int, factor: float = 1.25) -> int:
+    c = int(factor * cfg.top_k * n_tokens / cfg.n_experts)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU lanes
+
+
+def _dispatch_group(cfg: ModelConfig, xf: jnp.ndarray, probs: jnp.ndarray,
+                    cap: int):
+    """Group-local dispatch.  xf [t, d], probs [t, e] ->
+    (buf [e*cap, d], slot [t*k], st [t*k], gates [t*k], keep [t*k])."""
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)               # [t, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_expert = expert_idx.reshape(-1)                          # [t*k]
+    flat_token = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert, stable=True)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+
+    counts = jax.ops.segment_sum(jnp.ones_like(se), se, num_segments=e)
+    starts = jnp.concatenate([jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    pos_in_expert = jnp.arange(se.shape[0]) - starts[se]
+
+    keep = pos_in_expert < cap
+    slot = se * cap + jnp.where(keep, pos_in_expert, 0)
+    src = jnp.where(keep, slot, e * cap)   # OOB for dropped -> mode="drop"
+    buf = jnp.zeros((e * cap, d), xf.dtype).at[src].set(xf[st], mode="drop")
+    return buf, slot, st, sg, keep
+
+
+def _combine_group(out_e: jnp.ndarray, slot, st, sg, keep, t: int):
+    """out_e [e*cap, d] -> y [t, d]."""
+    contrib = (out_e[slot] * sg[:, None].astype(out_e.dtype)
+               * keep[:, None].astype(out_e.dtype))
+    return jax.ops.segment_sum(contrib, st, num_segments=t)
+
+
+def moe(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+        sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [b, s, d] -> (out, aux_loss).  Groups = batch rows when s > 1
+    (training / prefill; keeps dispatch shard-local), one flat group for
+    decode (s == 1: tokens-per-step is tiny)."""
+    sq = sq or {}
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+
+    grouped = s > 1
+    if grouped:
+        g, tg = b, s
+        xg = x                                                     # [g, tg, d]
+    else:
+        g, tg = 1, b * s
+        xg = x.reshape(1, tg, d)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                        # [g, tg, e]
+    cap = _capacity(cfg, tg)
+
+    buf, slot, st, sg_, keep = jax.vmap(
+        lambda xf, pr: _dispatch_group(cfg, xf, pr, cap))(xg, probs)
+    buf = buf.reshape(g, e, cap, d)
+    spec_fn = _expert_sharding()
+    if spec_fn is not None:
+        spec = spec_fn(buf.shape)
+        if spec is not None:
+            buf = jax.lax.with_sharding_constraint(buf, spec)
+
+    # ---- expert FFN (quantized), batched over groups ---------------------
+    if g == 1:
+        h = ctx.emm("moe_up", buf[0], p["wi"], mask=sq.get("moe_up"))
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        out_e = ctx.emm("moe_down", h, p["wo"], mask=sq.get("moe_down"))[None]
+    else:
+        # fold groups into the expert "token" dim: [e, g*cap, d]
+        bswap = buf.swapaxes(0, 1).reshape(e, g * cap, d)
+        h = ctx.emm("moe_up", bswap, p["wi"], mask=sq.get("moe_up"))
+        gate, up = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+        out_sw = ctx.emm("moe_down", h, p["wo"], mask=sq.get("moe_down"))
+        out_e = out_sw.reshape(e, g, cap, d).swapaxes(0, 1)        # [g,e,cap,d]
+
+    out_flat = out_e.reshape(g, e * cap, d)
+    yg = jax.vmap(lambda oe, sl, stt, gg, kk: _combine_group(oe, sl, stt, gg, kk, tg)
+                  )(out_flat, slot, st, sg_, keep).astype(x.dtype)
+    yf = yg.reshape(b * s, d)
+
+    if cfg.shared_expert:
+        yf = yf + mlp(cfg, p["shared"], ctx, xg.reshape(1, b * s, d), sq={
+            "mlp_up": sq.get("moe_shared_up"), "mlp_down": sq.get("moe_shared_down")})[0]
+
+    # ---- Switch aux loss (global over all groups) -------------------------
+    top1 = jnp.argmax(probs, axis=-1).reshape(-1)
+    assign_frac = jax.ops.segment_sum(
+        jnp.ones_like(top1, jnp.float32), top1, num_segments=e) / (g * tg)
+    prob_frac = probs.reshape(-1, e).mean(axis=0)
+    aux = e * jnp.sum(assign_frac * prob_frac)
+
+    return yf.reshape(b, s, d), aux
+
+
+_EXPERT_SHARDING: Optional[Callable] = None
+
+
+def set_expert_sharding(spec_fn: Optional[Callable]) -> None:
+    """Install a callable shape -> NamedSharding|None for the [g, e, C, d]
+    dispatch buffer (g over dp, e over 'model').  None disables the
+    constraint (single-device runs)."""
+    global _EXPERT_SHARDING
+    _EXPERT_SHARDING = spec_fn
+
+
+def _expert_sharding():
+    return _EXPERT_SHARDING

@@ -1,0 +1,218 @@
+"""Mamba2 block via the SSD (state-space duality) chunked algorithm
+(arXiv:2405.21060) — the matmul-dominant dual form, which is the right
+shape for the TPU MXU (DESIGN.md hardware adaptation): intra-chunk work is
+attention-like GEMMs, inter-chunk work is an O(S/Q) ``lax.scan`` carrying
+the [b, h, n, p] recurrent state.
+
+Decode is the O(1) recurrence  h <- a*h + dt*B⊗x,  y = C.h + D*x  — this is
+why mamba archs run the long_500k cell.
+
+TP layout (DESIGN.md §4): projections are split so the wide [z, x] part is
+column-parallel over SSD *heads* (h % mesh_model == 0 for both ssm archs)
+while the small shared [B, C, dt] part stays replicated (n_groups=1: B/C are
+shared across heads).  The depthwise conv splits the same way.  out_proj is
+row-parallel (one psum back to the residual).  Projections dominate FLOPs
+and run through the quantization ctx; the SSD scan itself is not a dense
+weight GEMM and stays in the compute dtype (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rmsnorm
+
+CONV_K = 4  # causal depthwise conv width
+
+
+def _dims(cfg: ModelConfig):
+    di, n, h, p = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    return di, n, h, p
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di, n, h, p = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        # column-parallel (by SSD head): gate z and state input x
+        "in_zx": dense_init(k1, (d, 2 * di)),
+        # replicated small head: B, C, dt
+        "in_bcdt": dense_init(k2, (d, 2 * n + h)),
+        "conv_x_w": jax.random.normal(k3, (CONV_K, di), jnp.float32) * 0.2,
+        "conv_x_b": jnp.zeros((di,), jnp.float32),
+        "conv_bc_w": jax.random.normal(k4, (CONV_K, 2 * n), jnp.float32) * 0.2,
+        "conv_bc_b": jnp.zeros((2 * n,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),          # A = exp(A_log) = 1
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),   # softplus ~= 0.12
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_gain": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(k1, (di, d), fan_in=di),
+    }
+
+
+def _causal_conv(xc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, width CONV_K: xc [b, s, ch]."""
+    pad = jnp.pad(xc, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xc.shape[1], :] * w[i] for i in range(CONV_K))
+    return out + b
+
+
+def ssd_chunked(cfg: ModelConfig, x: jnp.ndarray, dt: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, A: jnp.ndarray,
+                s0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over full sequence.  x [b,s,h,p], dt [b,s,h], B/C [b,s,n].
+    Returns (y [b,s,h,p], final state [b,h,n,p])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = min(cfg.ssm_chunk, s)
+    pad = (-s) % q
+    if pad:  # right-pad with dt=0 steps: a=1, zero injection -> state inert
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    s_padded = s + pad
+    nc = s_padded // q
+
+    la = (-dt.astype(jnp.float32) * A)                    # log a_t  [b,s,h]
+    dtx = (dt.astype(jnp.float32)[..., None] * x.astype(jnp.float32))  # [b,s,h,p]
+
+    # chunked views [b, nc, q, ...]
+    la_c = la.reshape(b, nc, q, h)
+    cum = jnp.cumsum(la_c, axis=2)                        # inclusive  [b,nc,q,h]
+    dtx_c = dtx.reshape(b, nc, q, h, p)
+    B_c = B.astype(jnp.float32).reshape(b, nc, q, n)
+    C_c = C.astype(jnp.float32).reshape(b, nc, q, n)
+
+    # ---- intra-chunk (attention-like dual form) -------------------------
+    G = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)           # [b,nc,q,q]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # cum_i - cum_j [b,nc,i,j,h]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", G[..., None] * L, dtx_c)
+
+    # ---- inter-chunk state scan ------------------------------------------
+    w_in = jnp.exp(cum[:, :, -1:, :] - cum)               # exp(cum_Q - cum_j) [b,nc,q,h]
+    s_in = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", B_c, w_in, dtx_c)
+    a_chunk = jnp.exp(cum[:, :, -1, :])                   # [b,nc,h]
+
+    if s0 is None:
+        s0 = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(state, inp):
+        s_inc, a_ck = inp                                  # [b,h,n,p], [b,h]
+        out_state = state                                  # state BEFORE chunk
+        new = a_ck[..., None, None] * state + s_inc
+        return new, out_state
+
+    s_in_t = jnp.moveaxis(s_in, 1, 0)                      # [nc,b,h,n,p]
+    a_t = jnp.moveaxis(a_chunk, 1, 0)                      # [nc,b,h]
+    s_final, s_before = jax.lax.scan(step, s0, (s_in_t, a_t))
+    s_before = jnp.moveaxis(s_before, 0, 1)                # [b,nc,h,n,p]
+
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", C_c, s_before) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(b, s_padded, h, p)[:, :s]
+    return y.astype(x.dtype), s_final
+
+
+def _project(cfg, p_, ctx, x, sq):
+    """Run both projections; returns z, xc(raw), bc(raw), dt(raw)."""
+    di, n, h, p = _dims(cfg)
+    zx = ctx("ssm_in_zx", x, p_["in_zx"], mask=sq.get("ssm_in_zx"))
+    bcdt = ctx("ssm_in_bcdt", x, p_["in_bcdt"], mask=sq.get("ssm_in_bcdt"))
+    z, xc = zx[..., :di], zx[..., di:]
+    bc, dt = bcdt[..., : 2 * n], bcdt[..., 2 * n:]
+    return z, xc, bc, dt
+
+
+def ssm_block(cfg: ModelConfig, p_: dict, ctx, x: jnp.ndarray,
+              sq: Optional[Dict] = None,
+              conv_state: Optional[jnp.ndarray] = None,
+              ssm_state: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Full-sequence Mamba2 block: x [b, s, d] -> [b, s, d].
+    If states are requested (conv_state/ssm_state not None), final states
+    are returned for decode handoff."""
+    sq = sq or {}
+    b, s, d = x.shape
+    di, n, h, p = _dims(cfg)
+    want_state = conv_state is not None or ssm_state is not None
+
+    z, xc_raw, bc_raw, dt = _project(cfg, p_, ctx, x, sq)
+
+    xc = _causal_conv(xc_raw, p_["conv_x_w"].astype(x.dtype), p_["conv_x_b"].astype(x.dtype))
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    bc = _causal_conv(bc_raw, p_["conv_bc_w"].astype(x.dtype), p_["conv_bc_b"].astype(x.dtype))
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    B, C = bc[..., :n], bc[..., n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p_["dt_bias"])   # [b,s,h]
+    A = jnp.exp(p_["A_log"])                                        # [h]
+    xh = xc.reshape(b, s, h, p)
+
+    y, s_final = ssd_chunked(cfg, xh, dt, B, C, A, s0=ssm_state)
+    y = y + (p_["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)      # gate
+    y = rmsnorm(y, p_["norm_gain"], cfg.norm_eps)
+    out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"))
+
+    new_state = None
+    if want_state:
+        # decode handoff: last K-1 *pre-conv* channel vectors + final state
+        new_state = {
+            "conv_x": xc_raw[:, -(CONV_K - 1):].astype(x.dtype),
+            "conv_bc": bc_raw[:, -(CONV_K - 1):].astype(x.dtype),
+            "ssm": s_final,
+        }
+    return out, new_state
+
+
+def ssm_decode(cfg: ModelConfig, p_: dict, ctx, x: jnp.ndarray,
+               state: dict, sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode.  x [b, 1, d]; state {"conv_x": [b,K-1,di],
+    "conv_bc": [b,K-1,2n], "ssm": [b,h,n,p]}."""
+    sq = sq or {}
+    b, one, d = x.shape
+    di, n, h, p = _dims(cfg)
+
+    z, xc_raw, bc_raw, dt = _project(cfg, p_, ctx, x, sq)
+
+    win_x = jnp.concatenate([state["conv_x"], xc_raw[:, :1]], axis=1)   # [b,K,di]
+    win_bc = jnp.concatenate([state["conv_bc"], bc_raw[:, :1]], axis=1)
+    xc = jnp.einsum("bkc,kc->bc", win_x, p_["conv_x_w"].astype(x.dtype)) + p_["conv_x_b"].astype(x.dtype)
+    bc = jnp.einsum("bkc,kc->bc", win_bc, p_["conv_bc_w"].astype(x.dtype)) + p_["conv_bc_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+    bc = jax.nn.silu(bc.astype(jnp.float32)).astype(x.dtype)
+    B1, C1 = bc[..., :n], bc[..., n:]
+
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p_["dt_bias"])  # [b,h]
+    A = jnp.exp(p_["A_log"])
+    a = jnp.exp(-dt1 * A)                                           # [b,h]
+    xh = xc.reshape(b, h, p).astype(jnp.float32)
+
+    s_prev = state["ssm"]                                            # [b,h,n,p]
+    inject = jnp.einsum("bn,bhp->bhnp", B1.astype(jnp.float32),
+                        dt1[..., None] * xh)
+    s_new = a[..., None, None] * s_prev + inject
+    y = jnp.einsum("bn,bhnp->bhp", C1.astype(jnp.float32), s_new)
+    y = y + p_["D"][None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm(y, p_["norm_gain"], cfg.norm_eps)
+    out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"))
+    return out, {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:], "ssm": s_new}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, layers: int, dtype=jnp.float32) -> dict:
+    di, n, h, p = _dims(cfg)
+    return {
+        "conv_x": jnp.zeros((layers, batch, CONV_K - 1, di), dtype),
+        "conv_bc": jnp.zeros((layers, batch, CONV_K - 1, 2 * n), dtype),
+        "ssm": jnp.zeros((layers, batch, h, n, p), jnp.float32),
+    }

@@ -1,0 +1,61 @@
+"""Function-preserving outlier injection (DESIGN.md §6).
+
+Big LMs develop activation channel outliers; a briefly-trained toy model may
+not.  To evaluate outlier-handling *faithfully* at CPU scale we transplant
+the phenomenon: multiply chosen channels of every pre-matmul norm gain by
+gamma and divide the matching rows of the consuming weight by gamma.  In
+exact arithmetic the network function is unchanged; the activation matrix
+entering each quantized matmul now has genuine channel outliers of
+magnitude ~gamma x normal.  This mirrors the LN-gain concentration
+mechanism documented for real LLMs (Bondarenko et al. 2021).
+
+Only the dense/gpt2 family is needed (the paper's experiments are GPT-2).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+def inject_outliers(cfg: ModelConfig, params, channels: Sequence[int],
+                    gamma: float = 20.0) -> dict:
+    """Scale ln1/ln2 gains up on ``channels`` and compensate in the rows of
+    wqkv / mlp wi.  Returns new params (input params untouched)."""
+    assert cfg.family == "dense", "surgery targets the paper's GPT-2 family"
+    # jnp-ify: checkpoint restores hand back numpy arrays
+    params = jax.tree.map(jnp.asarray, params)
+    ch = np.asarray(list(channels), np.int32)
+    layers = params["layers"]
+
+    def scale_gain(gain):  # [L, d] stacked; rmsnorm stores gain-1 offset
+        if cfg.norm == "rmsnorm":
+            g = 1.0 + gain
+            g = g.at[:, ch].mul(gamma)
+            return g - 1.0
+        return gain.at[:, ch].mul(gamma)
+
+    layers = dict(layers)
+    layers["ln1"] = dict(layers["ln1"])
+    layers["ln2"] = dict(layers["ln2"])
+    layers["ln1"]["gain"] = scale_gain(layers["ln1"]["gain"])
+    layers["ln2"]["gain"] = scale_gain(layers["ln2"]["gain"])
+
+    attn = dict(layers["attn"])
+    attn["wqkv"] = attn["wqkv"].at[:, ch, :].divide(gamma)
+    layers["attn"] = attn
+    mlp = dict(layers["mlp"])
+    mlp["wi"] = mlp["wi"].at[:, ch, :].divide(gamma)
+    layers["mlp"] = mlp
+
+    params["layers"] = layers
+    return params
+
+
+def pick_outlier_channels(cfg: ModelConfig, n: int = 6, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.choice(cfg.d_model, size=n, replace=False)

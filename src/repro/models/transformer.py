@@ -1,0 +1,548 @@
+"""The model stack: init + forward + decode for all five families.
+
+Families (cfg.family):
+  dense   — attn(+per-layer window flag)+MLP       (qwen*, gemma2, internvl2)
+  moe     — attn + mixture-of-experts FFN          (llama4-scout, dbrx)
+  ssm     — Mamba2 blocks only                     (mamba2)
+  hybrid  — Mamba2 + a *shared* attn+MLP block
+            applied every k layers                 (zamba2)
+  encdec  — encoder + decoder w/ cross-attn        (whisper)
+
+Two execution paths share one (stacked, [L, ...]-leading) param layout:
+  * ``scan=True``  — ``lax.scan`` over layers: tiny HLO, fast XLA compiles
+    at 512 devices, remat-friendly.  Per-layer data (window flags, MUXQ
+    outlier masks) ride along as scanned xs.
+  * ``scan=False`` — python loop with per-layer site names
+    (``layer{i}/attn_qkv`` …) so the eager calibration pass can attribute
+    activation stats to individual layers.
+
+The hybrid family always uses the python loop (38 compact blocks — HLO is
+small; the shared block's 6 KV caches don't fit scan's uniform-xs shape).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.context import FpCtx
+from repro.parallel.act_sharding import constrain
+from repro.models import attention as A
+from repro.models import mlp as M
+from repro.models import moe as E
+from repro.models import ssm as S
+from repro.models.common import (ModelConfig, apply_norm, cross_entropy,
+                                 dense_init, init_norm, softcap)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ModelConfig, kind: str, decoder: bool = False) -> dict:
+    ks = jax.random.split(key, 8)
+    if kind == "mamba":
+        return {"ln1": init_norm(cfg, cfg.d_model), "ssm": S.init_ssm(ks[0], cfg)}
+    p = {"ln1": init_norm(cfg, cfg.d_model), "attn": A.init_attention(ks[0], cfg),
+         "ln2": init_norm(cfg, cfg.d_model)}
+    if cfg.sandwich_norm:
+        p["ln1b"] = init_norm(cfg, cfg.d_model)
+        p["ln2b"] = init_norm(cfg, cfg.d_model)
+    if kind == "moe":
+        p["moe"] = E.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = M.init_mlp(ks[1], cfg)
+    if decoder:
+        p["cross"] = A.init_attention(ks[2], cfg, cross=True)
+        p["ln3"] = init_norm(cfg, cfg.d_model)
+    return p
+
+
+def _stacked_layers(key, cfg: ModelConfig, kinds, decoder: bool = False) -> dict:
+    """Init each layer then stack leaves to [L, ...].  All kinds in ``kinds``
+    must share a param structure (guaranteed per family)."""
+    keys = jax.random.split(key, len(kinds))
+    layers = [_init_layer(keys[i], cfg, kinds[i], decoder) for i in range(len(kinds))]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    k_embed, k_layers, k_enc, k_shared, k_head = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(k_embed, (cfg.padded_vocab, cfg.d_model), jnp.float32) * 0.02,
+        "ln_f": init_norm(cfg, cfg.d_model),
+    }
+    fam = cfg.family
+    if fam == "encdec":
+        params["enc_layers"] = _stacked_layers(k_enc, cfg, ["attn"] * cfg.n_enc_layers)
+        params["enc_ln_f"] = init_norm(cfg, cfg.d_model)
+        params["layers"] = _stacked_layers(k_layers, cfg, ["attn"] * cfg.n_layers, decoder=True)
+    elif fam == "hybrid":
+        params["layers"] = _stacked_layers(k_layers, cfg, ["mamba"] * cfg.n_layers)
+        params["shared"] = _init_layer(k_shared, cfg, "attn")
+    else:
+        params["layers"] = _stacked_layers(k_layers, cfg, list(cfg.blocks))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(k_head, (cfg.d_model, cfg.padded_vocab))
+    return params
+
+
+def layer_slice(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Block bodies (single layer)
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg, lp, ctx, x, positions, window_flag, sq, cache=None,
+                 prefix: str = "", causal: bool = True):
+    x = constrain(x)
+    h = apply_norm(cfg, lp["ln1"], x)
+    a, cache = A.attention(cfg, lp["attn"], _Named(ctx, prefix), h, positions,
+                           window_flag=window_flag, sq=sq, cache=cache, causal=causal)
+    if cfg.sandwich_norm:
+        a = apply_norm(cfg, lp["ln1b"], a)
+    x = x + a
+    h = apply_norm(cfg, lp["ln2"], x)
+    aux = jnp.float32(0)
+    if "moe" in lp:
+        m, aux = E.moe(cfg, lp["moe"], _Named(ctx, prefix), h, sq=sq)
+    else:
+        m = M.mlp(cfg, lp["mlp"], _Named(ctx, prefix), h, sq=sq)
+    if cfg.sandwich_norm:
+        m = apply_norm(cfg, lp["ln2b"], m)
+    return x + m, aux, cache
+
+
+def _decoder_block(cfg, lp, ctx, x, positions, memory, sq, cache=None):
+    """Whisper decoder: self-attn + cross-attn + mlp."""
+    x = constrain(x)
+    nctx = _Named(ctx, "")
+    h = apply_norm(cfg, lp["ln1"], x)
+    a, cache = A.attention(cfg, lp["attn"], nctx, h, positions, sq=sq, cache=cache)
+    x = x + a
+    h = apply_norm(cfg, lp["ln3"], x)
+    c = A.cross_attention(cfg, lp["cross"], nctx, h, memory, sq=sq)
+    x = x + c
+    h = apply_norm(cfg, lp["ln2"], x)
+    x = x + M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
+    return x, cache
+
+
+def _mamba_block(cfg, lp, ctx, x, sq, want_state=False):
+    x = constrain(x)
+    h = apply_norm(cfg, lp["ln1"], x)
+    o, st = S.ssm_block(cfg, lp["ssm"], ctx, h, sq=sq,
+                        conv_state=jnp.zeros(()) if want_state else None)
+    return x + o, st
+
+
+class _Named:
+    """Prefixes site names (``layer{i}/``) for the eager calibration path;
+    no-op prefix under scan."""
+    def __init__(self, ctx, prefix: str):
+        self.ctx, self.prefix = ctx, prefix
+        self.quantized = getattr(ctx, "quantized", False)
+
+    def __call__(self, name, x, w, mask=None, smooth=None):
+        return self.ctx(self.prefix + name, x, w, mask=mask, smooth=smooth)
+
+    def emm(self, name, x, w, mask=None, smooth=None):
+        return self.ctx.emm(self.prefix + name, x, w, mask=mask, smooth=smooth)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed(cfg: ModelConfig, params, tokens, extra) -> jnp.ndarray:
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.n_patches and extra is not None and "patches" in extra:
+        x = jnp.concatenate([extra["patches"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def _window_flags(cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.asarray([b == "local" for b in cfg.blocks])
+
+
+def _sq_for_layer(qparams, i=None):
+    """qparams: {site: [L, ch]} -> per-layer {site: [ch]} (sliced or scanned)."""
+    if qparams is None:
+        return {}
+    if i is None:
+        return qparams  # already sliced by scan
+    return {k: v[i] for k, v in qparams.items()}
+
+
+def forward(cfg: ModelConfig, params, tokens, ctx=None, *, extra=None,
+            scan: bool = True, cache: Optional[dict] = None,
+            qparams: Optional[Dict[str, jnp.ndarray]] = None
+            ) -> Dict[str, Any]:
+    """Full-sequence forward.
+
+    Returns {"logits": [b, s, V], "aux": moe-aux-loss, "cache": updated}.
+    ``cache`` (optional) is a stacked prefill KV cache to fill.
+    ``qparams``: {site: [L, channels]} static MUXQ outlier masks.
+    """
+    ctx = ctx or FpCtx()
+    fam = cfg.family
+    x = _embed(cfg, params, tokens, extra)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    aux_total = jnp.float32(0)
+    new_cache = None
+
+    if fam == "encdec":
+        memory = _encode(cfg, params, extra["frames"].astype(x.dtype), ctx, scan=scan)
+        x, new_cache = _run_decoder(cfg, params, x, positions, memory, ctx,
+                                    scan=scan, cache=cache, qparams=qparams)
+        if new_cache is not None:
+            new_cache["memory"] = memory
+    elif fam == "hybrid":
+        x, new_cache = _run_hybrid(cfg, params, x, positions, ctx,
+                                   cache=cache, qparams=qparams)
+    elif fam == "ssm":
+        x, new_cache = _run_ssm(cfg, params, x, ctx, scan=scan,
+                                cache=cache, qparams=qparams)
+    else:
+        x, aux_total, new_cache = _run_dense(cfg, params, x, positions, ctx,
+                                             scan=scan, cache=cache, qparams=qparams)
+
+    x = apply_norm(cfg, params["ln_f"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits, cfg.final_softcap)
+    return {"logits": logits, "aux": aux_total, "cache": new_cache}
+
+
+def _run_dense(cfg, params, x, positions, ctx, *, scan, cache, qparams):
+    flags = _window_flags(cfg)
+    if not scan:
+        aux_total = jnp.float32(0)
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = layer_slice(params["layers"], i)
+            c_i = None if cache is None else {"k": cache["k"][i], "v": cache["v"][i]}
+            x, aux, c_i = _dense_block(cfg, lp, ctx, x, positions, flags[i],
+                                       _sq_for_layer(qparams, i), cache=c_i,
+                                       prefix=f"layer{i}/")
+            aux_total = aux_total + aux
+            if c_i is not None:
+                ks.append(c_i["k"]); vs.append(c_i["v"])
+        nc = None
+        if cache is not None:
+            nc = {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                  "pos": jnp.asarray(x.shape[1], jnp.int32)}
+        return x, aux_total, nc
+
+    def body(carry, xs):
+        x, aux_total = carry
+        lp, flag, sq, c_k, c_v = xs
+        c_i = None if c_k is None else {"k": c_k, "v": c_v}
+        x, aux, c_i = _dense_block(cfg, lp, ctx, x, positions, flag, sq, cache=c_i)
+        y = (c_i["k"], c_i["v"]) if c_i is not None else (jnp.zeros(()), jnp.zeros(()))
+        return (x, aux_total + aux), y
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    sqs = qparams or {}
+    xs = (params["layers"], flags, sqs,
+          cache["k"] if cache is not None else None,
+          cache["v"] if cache is not None else None)
+    (x, aux_total), ys = jax.lax.scan(body, (x, jnp.float32(0)), xs)
+    nc = None
+    if cache is not None:
+        nc = {"k": ys[0], "v": ys[1], "pos": jnp.asarray(x.shape[1], jnp.int32)}
+    return x, aux_total, nc
+
+
+def _run_ssm(cfg, params, x, ctx, *, scan, cache, qparams):
+    want_state = cache is not None
+    if not scan:
+        states = []
+        for i in range(cfg.n_layers):
+            lp = layer_slice(params["layers"], i)
+            x, st = _mamba_block(cfg, lp, _Named(ctx, f"layer{i}/"), x,
+                                 _sq_for_layer(qparams, i), want_state=want_state)
+            if st is not None:
+                states.append(st)
+        nc = None
+        if want_state:
+            nc = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+            nc["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+        return x, nc
+
+    def body(x, xs):
+        lp, sq = xs
+        x, st = _mamba_block(cfg, lp, ctx, x, sq, want_state=want_state)
+        return x, (st if st is not None else jnp.zeros(()))
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, ys = jax.lax.scan(body, x, (params["layers"], qparams or {}))
+    nc = None
+    if want_state:
+        nc = dict(ys)
+        nc["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    return x, nc
+
+
+def _run_hybrid(cfg, params, x, positions, ctx, *, cache, qparams):
+    """zamba2: mamba stack + shared attn+MLP block every k layers.
+    Python loop (see module docstring)."""
+    k_every = cfg.shared_attn_every
+    want_state = cache is not None
+    states, sks, svs = [], [], []
+    shared_i = 0
+    for i in range(cfg.n_layers):
+        lp = layer_slice(params["layers"], i)
+        x, st = _mamba_block(cfg, lp, _Named(ctx, f"layer{i}/"), x,
+                             _sq_for_layer(qparams, i), want_state=want_state)
+        if st is not None:
+            states.append(st)
+        if i % k_every == k_every - 1:
+            c_i = None
+            if cache is not None:
+                c_i = {"k": cache["k"][shared_i], "v": cache["v"][shared_i]}
+            x, _, c_i = _dense_block(cfg, params["shared"], ctx, x, positions,
+                                     False, _sq_for_layer(qparams, i),
+                                     cache=c_i, prefix=f"shared{shared_i}/")
+            if c_i is not None:
+                sks.append(c_i["k"]); svs.append(c_i["v"])
+            shared_i += 1
+    nc = None
+    if want_state:
+        nc = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        nc.update({"k": jnp.stack(sks), "v": jnp.stack(svs),
+                   "pos": jnp.asarray(x.shape[1], jnp.int32)})
+    return x, nc
+
+
+def _encode(cfg, params, frames, ctx, *, scan=True):
+    """Whisper encoder over precomputed frame embeddings (frontend stub)."""
+    b, s, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = frames
+
+    if not scan:
+        for i in range(cfg.n_enc_layers):
+            lp = layer_slice(params["enc_layers"], i)
+            x, _, _ = _dense_block(cfg, lp, ctx, x, positions, False, {},
+                                   prefix=f"enc{i}/", causal=False)
+        return apply_norm(cfg, params["enc_ln_f"], x)
+
+    def body(x, lp):
+        x, _, _ = _dense_block(cfg, lp, ctx, x, positions, False, {}, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_ln_f"], x)
+
+
+def _run_decoder(cfg, params, x, positions, memory, ctx, *, scan, cache, qparams):
+    if not scan:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            lp = layer_slice(params["layers"], i)
+            c_i = None if cache is None else {"k": cache["k"][i], "v": cache["v"][i]}
+            x, c_i = _decoder_block(cfg, lp, _Named(ctx, f"layer{i}/"), x,
+                                    positions, memory, _sq_for_layer(qparams, i),
+                                    cache=c_i)
+            if c_i is not None:
+                ks.append(c_i["k"]); vs.append(c_i["v"])
+        nc = None
+        if cache is not None:
+            nc = {"k": jnp.stack(ks), "v": jnp.stack(vs),
+                  "pos": jnp.asarray(x.shape[1], jnp.int32)}
+        return x, nc
+
+    def body(x, xs):
+        lp, sq, c_k, c_v = xs
+        c_i = None if c_k is None else {"k": c_k, "v": c_v}
+        x, c_i = _decoder_block(cfg, lp, ctx, x, positions, memory, sq, cache=c_i)
+        y = (c_i["k"], c_i["v"]) if c_i is not None else (jnp.zeros(()), jnp.zeros(()))
+        return x, y
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["layers"], qparams or {},
+          cache["k"] if cache is not None else None,
+          cache["v"] if cache is not None else None)
+    x, ys = jax.lax.scan(body, x, xs)
+    nc = None
+    if cache is not None:
+        nc = {"k": ys[0], "v": ys[1], "pos": jnp.asarray(x.shape[1], jnp.int32)}
+    return x, nc
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, ctx=None, *,
+                qparams=None, scan: bool = True) -> Tuple[jnp.ndarray, dict]:
+    """tokens [b, 1] -> (logits [b, 1, V], updated cache).  The cache comes
+    from ``forward(..., cache=init_cache(...))`` (prefill) or zeros.
+    ``scan=False`` unrolls the layer loop (dry-run marginal-cost variants)."""
+    ctx = ctx or FpCtx()
+    fam = cfg.family
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+    pos = cache["pos"]
+
+    if fam in ("dense", "moe"):
+        flags = _window_flags(cfg)
+        int8_kv = "k_scale" in cache
+        scale_tree = ({"k_scale": cache["k_scale"], "v_scale": cache["v_scale"]}
+                      if int8_kv else {})
+
+        def body(x, xs):
+            lp, flag, sq, c_k, c_v, c_s = xs
+            c_i = {"k": c_k, "v": c_v, "pos": pos, **c_s}
+            nctx = _Named(ctx, "")
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, c_i = A.attention_decode(cfg, lp["attn"], nctx, h, c_i,
+                                        window_flag=flag, sq=sq)
+            if cfg.sandwich_norm:
+                a = apply_norm(cfg, lp["ln1b"], a)
+            x = x + a
+            h = apply_norm(cfg, lp["ln2"], x)
+            if "moe" in lp:
+                m, _ = E.moe(cfg, lp["moe"], nctx, h, sq=sq)
+            else:
+                m = M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
+            if cfg.sandwich_norm:
+                m = apply_norm(cfg, lp["ln2b"], m)
+            sc_out = ({"k_scale": c_i["k_scale"], "v_scale": c_i["v_scale"]}
+                      if int8_kv else {})
+            return x + m, (c_i["k"], c_i["v"], sc_out)
+
+        if scan:
+            xs = (params["layers"], flags, qparams or {}, cache["k"],
+                  cache["v"], scale_tree)
+            x, (ks, vs, scs) = jax.lax.scan(body, x, xs)
+        else:
+            ks_l, vs_l, sc_l = [], [], []
+            for i in range(cfg.n_layers):
+                x, (k_i, v_i, s_i) = body(x, (layer_slice(params["layers"], i),
+                                              flags[i], _sq_for_layer(qparams, i),
+                                              cache["k"][i], cache["v"][i],
+                                              jax.tree.map(lambda t: t[i], scale_tree)))
+                ks_l.append(k_i); vs_l.append(v_i); sc_l.append(s_i)
+            ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+            scs = (jax.tree.map(lambda *t: jnp.stack(t), *sc_l) if int8_kv else {})
+        new_cache = {"k": ks, "v": vs, "pos": pos + 1}
+        if int8_kv:
+            new_cache.update(scs)
+
+    elif fam == "ssm":
+        state_tree = {k: cache[k] for k in ("conv_x", "conv_bc", "ssm")}
+
+        def body(x, xs):
+            lp, sq, st_in = xs
+            h = apply_norm(cfg, lp["ln1"], x)
+            o, st = S.ssm_decode(cfg, lp["ssm"], ctx, h, st_in, sq=sq)
+            return x + o, st
+
+        if scan:
+            xs = (params["layers"], qparams or {}, state_tree)
+            x, sts = jax.lax.scan(body, x, xs)
+        else:
+            st_l = []
+            for i in range(cfg.n_layers):
+                x, st_i = body(x, (layer_slice(params["layers"], i),
+                                   _sq_for_layer(qparams, i),
+                                   jax.tree.map(lambda t: t[i], state_tree)))
+                st_l.append(st_i)
+            sts = jax.tree.map(lambda *xs_: jnp.stack(xs_), *st_l)
+        new_cache = dict(sts)
+        new_cache["pos"] = pos + 1
+
+    elif fam == "hybrid":
+        k_every = cfg.shared_attn_every
+        states, sks, svs = [], [], []
+        shared_i = 0
+        nctx = _Named(ctx, "")
+        for i in range(cfg.n_layers):
+            lp = layer_slice(params["layers"], i)
+            h = apply_norm(cfg, lp["ln1"], x)
+            st_in = {k: cache[k][i] for k in ("conv_x", "conv_bc", "ssm")}
+            o, st = S.ssm_decode(cfg, lp["ssm"], nctx, h, st_in,
+                                 sq=_sq_for_layer(qparams, i))
+            x = x + o
+            states.append(st)
+            if i % k_every == k_every - 1:
+                c_i = {"k": cache["k"][shared_i], "v": cache["v"][shared_i], "pos": pos}
+                h = apply_norm(cfg, params["shared"]["ln1"], x)
+                a, c_i = A.attention_decode(cfg, params["shared"]["attn"], nctx, h, c_i)
+                x = x + a
+                h = apply_norm(cfg, params["shared"]["ln2"], x)
+                x = x + M.mlp(cfg, params["shared"]["mlp"], nctx, h)
+                sks.append(c_i["k"]); svs.append(c_i["v"])
+                shared_i += 1
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+        new_cache.update({"k": jnp.stack(sks), "v": jnp.stack(svs), "pos": pos + 1})
+
+    elif fam == "encdec":
+        memory = cache["memory"]
+
+        def body(x, xs):
+            lp, sq, c_k, c_v = xs
+            c_i = {"k": c_k, "v": c_v, "pos": pos}
+            nctx = _Named(ctx, "")
+            h = apply_norm(cfg, lp["ln1"], x)
+            a, c_i = A.attention_decode(cfg, lp["attn"], nctx, h, c_i, sq=sq)
+            x = x + a
+            h = apply_norm(cfg, lp["ln3"], x)
+            x = x + A.cross_attention(cfg, lp["cross"], nctx, h, memory, sq=sq)
+            h = apply_norm(cfg, lp["ln2"], x)
+            x = x + M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
+            return x, (c_i["k"], c_i["v"])
+
+        if scan:
+            xs = (params["layers"], qparams or {}, cache["k"], cache["v"])
+            x, (ks, vs) = jax.lax.scan(body, x, xs)
+        else:
+            ks_l, vs_l = [], []
+            for i in range(cfg.n_layers):
+                x, (k_i, v_i) = body(x, (layer_slice(params["layers"], i),
+                                         _sq_for_layer(qparams, i),
+                                         cache["k"][i], cache["v"][i]))
+                ks_l.append(k_i); vs_l.append(v_i)
+            ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
+        new_cache = {"k": ks, "v": vs, "pos": pos + 1, "memory": memory}
+    else:  # pragma: no cover
+        raise ValueError(fam)
+
+    x = apply_norm(cfg, params["ln_f"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(cfg: ModelConfig, params, batch, ctx=None, *, scan=True,
+            qparams=None, aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+    """batch: {"tokens": [b,s], "labels": [b,s], optional "mask", "patches",
+    "frames"}."""
+    extra = {k: batch[k] for k in ("patches", "frames") if k in batch}
+    out = forward(cfg, params, batch["tokens"], ctx, extra=extra or None,
+                  scan=scan, qparams=qparams)
+    logits = out["logits"]
+    if cfg.n_patches and "patches" in batch:   # vlm: loss over text positions
+        logits = logits[:, -batch["tokens"].shape[1]:]
+    loss = cross_entropy(logits, batch["labels"], cfg.vocab_size,
+                         batch.get("mask"))
+    total = loss + aux_weight * out["aux"]
+    return total, {"ce": loss, "aux": out["aux"]}

@@ -1,0 +1,95 @@
+"""Pure-JAX AdamW with schedules and global-norm clipping.
+
+No optax in this container — this is the framework's optimizer substrate.
+State is a params-shaped pytree pair (mu, nu) + a scalar step, so optimizer
+state inherits parameter shardings verbatim (FSDP-friendly: DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    schedule: str = "cosine"       # constant|cosine|linear
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: AdamWConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - (1.0 - cfg.min_lr_frac) * frac
+    else:  # cosine
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def init_state(params) -> Dict[str, Any]:
+    zeros = lambda t: jax.tree.map(jnp.zeros_like, t)
+    return {"mu": zeros(params), "nu": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def apply_updates(cfg: AdamWConfig, params, grads, state
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    if cfg.clip_norm is not None:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32)
+        p32 = p.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mhat = mu / bc1
+        nhat = nu / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p32
+        return (p32 - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    state = {"mu": new_mu, "nu": new_nu, "step": step}
+    return new_p, state, {"lr": lr, "grad_norm": gnorm}

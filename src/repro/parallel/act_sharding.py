@@ -1,0 +1,56 @@
+"""Process-global activation-sharding constraint hook.
+
+The model stack is mesh-agnostic; the launcher installs a residual-stream
+constraint (batch over dp, optionally seq over model = Megatron-SP) that the
+scan bodies apply.  Plain module state — set before tracing, read at trace
+time (the constraint bakes into the jaxpr)."""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+_SPEC = None
+
+
+def set_activation_sharding(spec) -> None:
+    global _SPEC
+    _SPEC = spec
+
+
+@contextmanager
+def activation_sharding(spec):
+    global _SPEC
+    prev = _SPEC
+    _SPEC = spec
+    try:
+        yield
+    finally:
+        _SPEC = prev
+
+
+def constrain(x):
+    """Apply the installed constraint to a [b, s, d] activation (no-op when
+    unset or rank mismatches)."""
+    if _SPEC is None or x.ndim != len(_SPEC.spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, _SPEC)
+
+
+_CACHE_UPDATE = "dus"
+
+
+def set_cache_update_mode(mode: str) -> None:
+    """"dus" (dynamic_update_slice) or "select" (iota==pos elementwise).
+
+    With a seq-sharded KV cache, a dus at a traced position makes GSPMD
+    rematerialize the whole cache per step; the select form is elementwise and
+    stays shard-local (flash-decoding-style seq sharding needs this)."""
+    global _CACHE_UPDATE
+    assert mode in ("dus", "select"), mode
+    _CACHE_UPDATE = mode
+
+
+def cache_update_mode() -> str:
+    return _CACHE_UPDATE

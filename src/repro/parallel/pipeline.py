@@ -1,0 +1,86 @@
+"""GPipe-style pipeline parallelism over a mesh axis (DESIGN.md §4 PP).
+
+The layer stack is split into ``n_stages`` contiguous stages along a mesh
+axis (multi-pod: the 'pod' axis — PP's point-to-point traffic is the right
+shape for the slow inter-pod links).  Execution inside ``shard_map``:
+
+  * every stage holds its own layer slice (params sharded on the stacked
+    layer dim over the stage axis);
+  * microbatches stream through the classic GPipe schedule: at tick t,
+    stage s processes microbatch t-s; activations hop stage->stage+1 with
+    one ``ppermute`` per tick (bubble fraction = (S-1)/(T+S-1));
+  * the returned per-stage outputs are the final-stage activations,
+    broadcast back (callers typically compute loss on the last stage).
+
+This module implements the *schedule* generically over a user block fn, so
+it is testable in exact equality against the unpipelined stack on virtual
+devices (tests/test_distributed.py) without dragging the whole model in.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def pipeline_apply(block_fn: Callable, stage_params, x_micro: jnp.ndarray,
+                   axis: str) -> jnp.ndarray:
+    """Run the pipeline inside shard_map.
+
+    block_fn(stage_params, x) -> x    one stage's worth of layers
+    stage_params: this stage's param slice (leading dim = layers-per-stage)
+    x_micro: [n_micro, mb, ...] microbatched input, replicated across the
+             stage axis (only stage 0 consumes it; other stages consume the
+             in-flight activations)
+    Returns [n_micro, mb, ...] final-stage outputs (valid on the last
+    stage; callers psum/broadcast as needed).
+    """
+    n_stages = jax.lax.axis_size(axis)
+    stage = jax.lax.axis_index(axis)
+    n_micro = x_micro.shape[0]
+    n_ticks = n_micro + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]   # stage s -> s+1
+
+    mb_shape = x_micro.shape[1:]
+    outputs = jnp.zeros_like(x_micro)
+    carry_in = jnp.zeros(mb_shape, x_micro.dtype)      # activation arriving
+
+    def tick(t, state):
+        outputs, carry_in = state
+        # stage 0 injects microbatch t; others take the permuted activation
+        mb_idx = jnp.clip(t, 0, n_micro - 1)
+        x_in = jnp.where(stage == 0, x_micro[mb_idx], carry_in)
+        y = block_fn(stage_params, x_in)
+        # last stage banks microbatch (t - (n_stages-1)) when it's valid
+        out_idx = jnp.clip(t - (n_stages - 1), 0, n_micro - 1)
+        bank = (stage == n_stages - 1) & (t >= n_stages - 1)
+        outputs = jax.lax.cond(
+            bank,
+            lambda o: jax.lax.dynamic_update_index_in_dim(o, y, out_idx, 0),
+            lambda o: o, outputs)
+        carry_next = jax.lax.ppermute(y, axis, perm)
+        return outputs, carry_next
+
+    outputs, _ = jax.lax.fori_loop(0, n_ticks, tick, (outputs, carry_in))
+    # broadcast final-stage outputs to every stage (convenient for loss)
+    has = (stage == n_stages - 1).astype(outputs.dtype)
+    return jax.lax.psum(outputs * has, axis)
+
+
+def split_stages(stacked_params, n_stages: int):
+    """[L, ...]-stacked params -> [n_stages, L/n_stages, ...] per leaf, so a
+    shard_map in_spec P('stage') hands each stage its slice."""
+    def reshape(x):
+        L = x.shape[0]
+        assert L % n_stages == 0, (L, n_stages)
+        return x.reshape(n_stages, L // n_stages, *x.shape[1:])
+    return jax.tree.map(reshape, stacked_params)
+
+
+def microbatch(batch: jnp.ndarray, n_micro: int) -> jnp.ndarray:
+    """[B, ...] -> [n_micro, B/n_micro, ...]."""
+    B = batch.shape[0]
+    assert B % n_micro == 0, (B, n_micro)
+    return batch.reshape(n_micro, B // n_micro, *batch.shape[1:])

@@ -1,0 +1,228 @@
+"""Logical-axis sharding rules (MaxText-style) for every param/activation.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+The "pod" axis is hierarchical data parallelism (DESIGN.md §4).
+
+Logical axes used by the rules table:
+  tp        — tensor-parallel dim (fused-QKV out, d_ff, d_inner, vocab...)
+  embed     — d_model dim of weight matrices; sharded over "data" (ZeRO/FSDP
+              2-D weight sharding) when ``fsdp`` is on — required to fit
+              qwen1.5-110b serving (see DESIGN.md §4)
+  expert    — MoE expert dim -> "model" (expert parallelism)
+  batch     — over ("pod","data")
+  seq       — sequence dim; "model" for sequence parallelism / KV caches
+  kv_heads  — cache head dim; "model" when divisible, else dropped
+  ssd_heads — mamba SSD head dim -> "model"
+
+Every spec goes through :func:`fit_spec`, which *drops* mesh axes from dims
+they don't divide — that single rule makes all 10 archs (kv=2..64 heads,
+odd vocabs, d_ff not always /16) shardable on the same mesh without
+per-arch special cases.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+def mesh_axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size
+
+
+def fit_spec(mesh: Mesh, shape: Sequence[int], wanted: Sequence) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide their dim."""
+    out = []
+    used = set()
+    for size, axes in zip(shape, wanted):
+        if axes is None:
+            out.append(None)
+            continue
+        cand = (axes,) if isinstance(axes, str) else tuple(axes)
+        cand = tuple(a for a in cand if a in mesh.shape and a not in used)
+        keep = []
+        prod = 1
+        for a in cand:  # greedy prefix that divides
+            if size % (prod * mesh.shape[a]) == 0:
+                keep.append(a)
+                prod *= mesh.shape[a]
+        if keep:
+            used.update(keep)
+            out.append(tuple(keep) if len(keep) > 1 else keep[0])
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules, keyed on the leaf path (joined with "/")
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES = [  # (regex on path, logical axes for the *trailing* dims)
+    (r"embed$", ("tp", "embed")),          # [V, d] vocab-sharded
+    (r"lm_head$", ("embed", "tp")),        # [d, V]
+    (r"attn/wqkv$", ("embed", "tp")),
+    (r"attn/bqkv$", ("tp",)),
+    (r"attn/wo$", ("tp", "embed")),
+    (r"cross/wq$", ("embed", "tp")),
+    (r"cross/wkv$", ("embed", "tp")),
+    (r"cross/wo$", ("tp", "embed")),
+    (r"mlp/wi$", ("embed", "tp")),
+    (r"mlp/wo$", ("tp", "embed")),
+    (r"mlp/bi$", ("tp",)),
+    (r"mlp/bo$", (None,)),
+    (r"shared/mlp/wi$", ("embed", "tp")),
+    (r"moe/router$", ("embed", None)),
+    (r"moe/wi$", ("expert", None, None)),
+    (r"moe/wo$", ("expert", None, None)),
+    (r"moe/shared/wi$", ("embed", "tp")),
+    (r"moe/shared/wo$", ("tp", "embed")),
+    (r"ssm/in_zx$", ("embed", "tp")),
+    (r"ssm/in_bcdt$", ("embed", None)),
+    (r"ssm/out_proj$", ("tp", "embed")),
+    (r"ssm/conv_x_w$", (None, "tp")),
+    (r"ssm/conv_x_b$", ("tp",)),
+    (r"ssm/norm_gain$", ("tp",)),
+    (r"ln", (None,)),                       # any norm leaf: replicated
+]
+
+_LOGICAL = {
+    "tp": "model",
+    "expert": "model",
+    "kv_heads": "model",
+    "ssd_heads": "model",
+    "seq": "model",
+}
+
+
+def _leaf_path(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _logical_to_mesh(axes, fsdp: bool):
+    out = []
+    for a in axes:
+        if a is None:
+            out.append(None)
+        elif a == "embed":
+            out.append("data" if fsdp else None)
+        elif a == "batch":
+            out.append(("pod", "data"))
+        else:
+            out.append(_LOGICAL.get(a, a))
+    return out
+
+
+def param_specs(cfg: ModelConfig, abstract_params, mesh: Mesh, fsdp: bool = True):
+    """Pytree of NamedSharding matching ``abstract_params``.
+
+    Stacked layer leaves ([L, ...] under layers/enc_layers) get a leading
+    replicated dim automatically.
+    """
+    def spec_for(path, leaf):
+        pathstr = _leaf_path(path)
+        # pre-quantized weights ({"q","s"} dicts) share the dense rule
+        pathstr = re.sub(r"/(q|s)$", "", pathstr)
+        stacked = bool(re.search(r"(^|/)(layers|enc_layers)/", pathstr))
+        logical = None
+        for pat, ax in _PARAM_RULES:
+            if re.search(pat, pathstr):
+                logical = list(ax)
+                break
+        if logical is None:
+            logical = [None] * (leaf.ndim - (1 if stacked else 0))
+        if stacked:
+            logical = [None] + logical
+        # pad/trim to rank
+        while len(logical) < leaf.ndim:
+            logical.append(None)
+        logical = logical[: leaf.ndim]
+        mesh_axes = _logical_to_mesh(logical, fsdp)
+        return NamedSharding(mesh, fit_spec(mesh, leaf.shape, mesh_axes))
+
+    return jax.tree_util.tree_map_with_path(spec_for, abstract_params)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(mesh: Mesh, batch_tree):
+    """tokens/labels [b, s] (+ patches/frames [b, n, d]) sharded on batch."""
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        axes = [dp] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, fit_spec(mesh, leaf.shape, axes))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_tree):
+    """KV / SSM state shardings.
+
+    k/v      [L, b, s, kv, dh]: batch->dp, kv->model (else seq->model)
+    conv_x   [L, b, K-1, di]  : di->model
+    conv_bc  [L, b, K-1, 2n]  : replicated (small, shared across heads)
+    ssm      [L, b, h, n, p]  : h->model
+    memory   [b, frames, d]   : batch->dp
+    """
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = _leaf_path(path)
+        if name in ("k", "v", "k_scale", "v_scale"):
+            m = mesh.shape["model"]
+            if cfg.n_kv_heads % m == 0:         # shard kv heads
+                axes = [None, dp, None, "model", None]
+            else:                               # flash-decoding-style seq
+                # sharding (decode must use the select cache update so the
+                # write stays shard-local — launch sets the mode)
+                axes = [None, dp, "model", None, None]
+        elif name == "conv_x":
+            axes = [None, dp, None, "model"]
+        elif name == "conv_bc":
+            axes = [None, dp, None, None]
+        elif name == "ssm":
+            axes = [None, dp, "model", None, None]
+        elif name == "memory":
+            axes = [dp, None, None]
+        else:  # pos scalar etc.
+            axes = [None] * leaf.ndim
+        return NamedSharding(mesh, fit_spec(mesh, leaf.shape, axes))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_tree)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def activation_spec(mesh: Mesh, seq_shard: bool = False) -> NamedSharding:
+    """Residual-stream constraint [b, s, d]: batch over dp; seq over model
+    when sequence parallelism is on (required to fit 110B-class training —
+    the per-layer remat saves are seq-sharded, DESIGN.md §4)."""
+    dp = dp_axes(mesh)
+    return NamedSharding(mesh, P(dp, "model" if seq_shard else None, None))

@@ -1,0 +1,121 @@
+"""Batched serving engine: prefill + decode with continuous slot management.
+
+A fixed pool of ``max_batch`` slots; finished sequences (EOS or length cap)
+free their slot and the next queued request is prefilled into it
+(continuous-batching-lite).  The decode step is a single jit'd program over
+the whole pool, so new arrivals never recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.context import FpCtx, QuantCtx
+from repro.core.muxq import QuantConfig
+from repro.data import tokenizer as tok
+from repro.models import transformer as T
+from repro.models.attention import init_cache
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: str
+    max_new_tokens: int = 32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """CPU-scale reference engine (same step functions the dry-run lowers at
+    pod scale)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
+                 s_max: int = 512, quant: Optional[QuantConfig] = None,
+                 qparams=None, greedy: bool = True):
+        assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
+        self.cfg, self.params = cfg, params
+        self.max_batch, self.s_max = max_batch, s_max
+        self.ctx = FpCtx() if quant is None else QuantCtx(quant)
+        self.qparams = qparams
+        self.greedy = greedy
+
+        def decode(params, tokens, cache):
+            logits, cache = T.decode_step(cfg, params, tokens, cache,
+                                          self.ctx, qparams=qparams)
+            nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+            return nxt.astype(jnp.int32), cache
+
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+
+    def _prefill_one(self, prompt_ids: np.ndarray):
+        """Prefill a single sequence; returns (next_token, cache_b1)."""
+        tokens = jnp.asarray(prompt_ids)[None]
+        cache = init_cache(self.cfg, 1, self.s_max, dtype=jnp.float32)
+        out = T.forward(self.cfg, self.params, tokens, self.ctx,
+                        scan=self.cfg.family != "hybrid", cache=cache,
+                        qparams=self.qparams)
+        nxt = int(jnp.argmax(out["logits"][0, -1, : self.cfg.vocab_size]))
+        return nxt, out["cache"]
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Run all requests to completion with slot reuse."""
+        queue = list(requests)
+        slots: List[Optional[Request]] = [None] * self.max_batch
+        caches: List[Optional[dict]] = [None] * self.max_batch
+        last_tok = np.zeros(self.max_batch, np.int32)
+
+        def admit():
+            for i in range(self.max_batch):
+                if slots[i] is None and queue:
+                    req = queue.pop(0)
+                    ids = tok.encode(req.prompt)
+                    nxt, cache = self._prefill_one(ids)
+                    req.out_tokens.append(nxt)
+                    slots[i], caches[i] = req, cache
+                    last_tok[i] = nxt
+
+        admit()
+        while any(s is not None for s in slots):
+            # batch the active slots into one pool-wide decode
+            active = [i for i, s in enumerate(slots) if s is not None]
+            # per-slot pos may differ; batch slots into one decode step when
+            # their positions align, else step them individually
+            pos_vals = {int(caches[i]["pos"]) for i in active}
+            if len(pos_vals) == 1 and len(active) > 1:
+                pool_cache = jax.tree.map(
+                    lambda *xs: (jnp.concatenate(xs, axis=1)
+                                 if getattr(xs[0], "ndim", 0) > 1 else xs[0]),
+                    *[caches[i] for i in active])
+                tokens = jnp.asarray(last_tok[active])[:, None]
+                nxt, pool_cache = self._decode(self.params, tokens, pool_cache)
+                outs = np.asarray(nxt)
+                for j, i in enumerate(active):
+                    caches[i] = jax.tree.map(
+                        lambda x: x[:, j:j + 1] if getattr(x, "ndim", 0) > 1 else x,
+                        pool_cache)
+                    self._post_token(slots, caches, last_tok, i, int(outs[j]))
+            else:
+                for i in active:
+                    tokens = jnp.asarray([[last_tok[i]]])
+                    nxt, caches[i] = self._decode(self.params, tokens, caches[i])
+                    self._post_token(slots, caches, last_tok, i, int(nxt[0]))
+            admit()
+        return requests
+
+    def _post_token(self, slots, caches, last_tok, i, token: int) -> None:
+        req = slots[i]
+        req.out_tokens.append(token)
+        last_tok[i] = token
+        if token == tok.EOS or len(req.out_tokens) >= req.max_new_tokens:
+            req.done = True
+            slots[i] = None
+            caches[i] = None
+
+    @staticmethod
+    def text(req: Request) -> str:
+        return tok.decode(req.out_tokens)

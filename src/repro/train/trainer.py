@@ -1,0 +1,87 @@
+"""Training loop with auto-resume, checkpoint cadence, and failure injection
+hooks (the fault-tolerance story is tested by killing/restarting the loop —
+tests/test_checkpoint.py does exactly that).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core.muxq import QuantConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.launch.steps import make_train_step
+from repro.models import transformer as T
+from repro.models.common import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    resume: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 pcfg: Optional[PipelineConfig] = None,
+                 acfg: Optional[adamw.AdamWConfig] = None,
+                 quant: Optional[QuantConfig] = None,
+                 text: Optional[str] = None,
+                 jit: bool = True):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.acfg = acfg or adamw.AdamWConfig(total_steps=tcfg.steps)
+        self.pipe = TokenPipeline(pcfg or PipelineConfig(), text=text)
+        self.params = T.init_params(cfg, jax.random.PRNGKey(tcfg.seed))
+        self.opt_state = adamw.init_state(self.params)
+        step_fn = make_train_step(cfg, self.acfg, quant=quant,
+                                  scan=cfg.family != "hybrid")
+        self.step_fn = jax.jit(step_fn, donate_argnums=(0, 1)) if jit else step_fn
+        self.step = 0
+        self.history: list = []
+        if tcfg.resume and tcfg.ckpt_dir:
+            self._maybe_resume()
+
+    def _maybe_resume(self) -> None:
+        last = ckpt.latest_step(self.tcfg.ckpt_dir)
+        if last is None:
+            return
+        self.params, self.opt_state, meta = ckpt.restore(
+            self.tcfg.ckpt_dir, last, self.params, self.opt_state)
+        self.step = int(meta["step"])
+        self.pipe.load_state_dict(meta.get("data", {"step": self.step}))
+
+    def run(self, on_step: Optional[Callable[[int, Dict], None]] = None) -> Dict[str, Any]:
+        t0 = time.time()
+        while self.step < self.tcfg.steps:
+            batch = self.pipe.batch_at(self.step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            self.pipe.step = self.step
+            if self.step % self.tcfg.log_every == 0 or self.step == self.tcfg.steps:
+                loss = float(metrics["loss"])
+                self.history.append({"step": self.step, "loss": loss})
+                if on_step:
+                    on_step(self.step, {k: float(v) for k, v in metrics.items()})
+            if (self.tcfg.ckpt_dir and
+                    (self.step % self.tcfg.ckpt_every == 0
+                     or self.step == self.tcfg.steps)):
+                ckpt.save(self.tcfg.ckpt_dir, self.step, self.params,
+                          self.opt_state,
+                          extra={"data": self.pipe.state_dict()},
+                          keep=self.tcfg.keep)
+        return {"steps": self.step, "wall_s": time.time() - t0,
+                "history": self.history,
+                "final_loss": self.history[-1]["loss"] if self.history else None}

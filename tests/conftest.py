@@ -1,0 +1,9 @@
+import os
+
+# Tests see the single real CPU device; ONLY launch/dryrun.py sets the
+# 512-device placeholder flag (per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,68 @@
+"""Pallas flash-attention vs oracle: shape/dtype/feature sweep (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import flash_attention_ref
+
+
+def mk(b, sq, sk, h, kv, dh, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), dtype)
+    k = jax.random.normal(ks[1], (b, sk, kv, dh), dtype)
+    v = jax.random.normal(ks[2], (b, sk, kv, dh), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("b,s,h,kv,dh", [
+    (1, 128, 4, 4, 64), (2, 256, 4, 2, 64), (1, 256, 8, 2, 128),
+    (2, 128, 6, 6, 64),
+])
+def test_causal_matches_ref(b, s, h, kv, dh):
+    q, k, v = mk(b, s, s, h, kv, dh)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k=k, v=v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_noncausal_and_bf16():
+    q, k, v = mk(1, 128, 128, 4, 4, 64, dtype=jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=False, bq=64, bk=64, interpret=True)
+    ref = flash_attention_ref(q, k=k, v=v, causal=False)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_sliding_window():
+    q, k, v = mk(1, 256, 256, 4, 4, 64)
+    out = flash_attention(q, k, v, causal=True, window=64, bq=64, bk=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k=k, v=v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_softcap_gemma2_style():
+    q, k, v = mk(1, 128, 128, 4, 2, 64, seed=3)
+    out = flash_attention(q, k, v, causal=True, softcap=50.0, bq=64, bk=64,
+                          interpret=True)
+    ref = flash_attention_ref(q, k=k, v=v, causal=True, softcap=50.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_matches_model_sdpa():
+    """The kernel must agree with the model stack's attention math."""
+    from repro.models.attention import sdpa, causal_bias
+    from repro.configs import get_config
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    dh = cfg.head_dim
+    q, k, v = mk(2, 64, 64, cfg.n_heads, cfg.n_kv_heads, dh, seed=5)
+    bias = causal_bias(64, 64, cfg.window_size, False)
+    ref = sdpa(cfg, q, k, v, bias)
+    out = flash_attention(q, k, v, causal=True, bq=64, bk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)

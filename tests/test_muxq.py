@@ -1,0 +1,155 @@
+"""Tests for the paper's core contribution: MUXQ decomposition + baselines."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import muxq as M
+from repro.core import outliers as O
+from repro.core import quantizers as Q
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def make_outlier_matrix(key=0, m=64, k=256, n_out=5, gamma=30.0):
+    x = np.array(jax.random.normal(jax.random.PRNGKey(key), (m, k)), np.float32)
+    idx = np.random.default_rng(key).choice(k, n_out, replace=False)
+    x[:, idx] *= gamma
+    return jnp.asarray(x), idx
+
+
+# ---- Eq. 4-6: the decomposition is exact --------------------------------
+
+@given(exp=st.integers(1, 4), seed=st.integers(0, 1000))
+def test_decompose_reconstruct_exact(exp, seed):
+    x, _ = make_outlier_matrix(seed % 7)
+    mask = O.outlier_mask(x, 6.0)
+    body = M.decompose(x, mask, exp)
+    xr = M.reconstruct(body, mask, exp)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), rtol=0, atol=0)
+
+
+def test_decompose_shrinks_outliers():
+    x, idx = make_outlier_matrix()
+    mask = O.outlier_mask(x, 6.0)
+    body = M.decompose(x, mask, 2)
+    assert float(jnp.max(jnp.abs(body))) < float(jnp.max(jnp.abs(x)))
+    # paper Fig 1: outlier channel magnitude reduced ~2^exp
+    ratio = float(jnp.max(jnp.abs(x[:, idx])) / jnp.max(jnp.abs(body[:, idx])))
+    assert ratio == pytest.approx(4.0, rel=1e-5)
+
+
+# ---- paper Table 1 ordering: naive > muxq >= llm.int8 -------------------
+
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_token"])
+@pytest.mark.parametrize("act_bits", [8, 7, 6])
+def test_error_ordering(granularity, act_bits):
+    x, _ = make_outlier_matrix()
+    w = jax.random.normal(jax.random.PRNGKey(9), (256, 128)) * 0.05
+    y_fp = x @ w
+
+    def rel(cfg):
+        y = M.qmatmul(x, w, cfg)
+        return float(jnp.mean((y - y_fp) ** 2) / jnp.mean(y_fp ** 2))
+
+    base = dict(act_bits=act_bits, act_granularity=granularity)
+    e_naive = rel(M.QuantConfig(method="naive", **base))
+    e_muxq = rel(M.QuantConfig(method="muxq", exp_factor=2, **base))
+    e_l8 = rel(M.QuantConfig(method="llm_int8", **base))
+    assert e_muxq < e_naive, f"muxq {e_muxq} !< naive {e_naive}"
+    assert e_l8 <= e_muxq * 1.5  # llm.int8 (fp16 outliers) is the floor
+
+
+def test_gap_widens_at_lower_bits():
+    """Paper: 'the difference ... becomes more evident as activation
+    precision decreases'.  Holds when exp_factor matches the outlier
+    magnitude (paper §3.3: exp chosen so outliers land near normal levels;
+    gamma=8 outliers -> exp=2 shrinks them to ~2x normal, the paper's own
+    operating point under the |x|>6 criterion)."""
+    x, _ = make_outlier_matrix(gamma=8.0)
+    w = jax.random.normal(jax.random.PRNGKey(9), (256, 128)) * 0.05
+    y_fp = x @ w
+    gains = []
+    for bits in (8, 6, 5):
+        e_n = float(jnp.mean((M.qmatmul(x, w, M.QuantConfig(method="naive", act_bits=bits)) - y_fp) ** 2))
+        e_m = float(jnp.mean((M.qmatmul(x, w, M.QuantConfig(method="muxq", act_bits=bits, exp_factor=2)) - y_fp) ** 2))
+        gains.append(e_n / e_m)
+    assert gains[-1] > gains[0], f"muxq advantage should grow: {gains}"
+
+
+# ---- real-int8 path: fused == paper two-GEMM ------------------------------
+
+@given(exp=st.integers(1, 3), seed=st.integers(0, 50))
+def test_fused_equals_paper_form(exp, seed):
+    x, _ = make_outlier_matrix(seed % 5)
+    w = jax.random.normal(jax.random.PRNGKey(seed), (256, 64)) * 0.05
+    mask = O.outlier_mask(x, 6.0)
+    cfg = M.QuantConfig(method="muxq", real_int8=True, exp_factor=exp,
+                        act_granularity="per_token")
+    y_paper = M.muxq_matmul_paper(x, w, cfg.replace(muxq_form="paper"), mask)
+    y_fused = M.muxq_matmul_fused(x, w, cfg.replace(muxq_form="fused"), mask)
+    # same int8 representation (shared scales) => identical results
+    np.testing.assert_allclose(np.asarray(y_paper), np.asarray(y_fused),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_no_outliers_degrades_to_naive():
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))  # no outliers
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 32)) * 0.1
+    y_m = M.qmatmul(x, w, M.QuantConfig(method="muxq"))
+    y_n = M.qmatmul(x, w, M.QuantConfig(method="naive"))
+    np.testing.assert_allclose(np.asarray(y_m), np.asarray(y_n), atol=1e-6)
+
+
+def test_static_vs_dynamic_masks():
+    x, idx = make_outlier_matrix()
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 64)) * 0.05
+    mask = np.zeros(256, bool)
+    mask[idx] = True
+    y_dyn = M.qmatmul(x, w, M.QuantConfig(method="muxq", outlier_mode="dynamic"))
+    y_static = M.qmatmul(x, w, M.QuantConfig(method="muxq", outlier_mode="static"),
+                         mask=jnp.asarray(mask))
+    np.testing.assert_allclose(np.asarray(y_dyn), np.asarray(y_static), atol=1e-5)
+
+
+# ---- smoothquant ----------------------------------------------------------
+
+def test_smoothquant_exact_in_fp():
+    from repro.core.smoothquant import apply_smoothing
+    x, _ = make_outlier_matrix()
+    w = jax.random.normal(jax.random.PRNGKey(3), (256, 64)) * 0.05
+    xs, ws = apply_smoothing(x, w, None)
+    np.testing.assert_allclose(np.asarray(xs @ ws), np.asarray(x @ w),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_muxq_smooth_combination_beats_naive():
+    x, _ = make_outlier_matrix(gamma=50.0)
+    w = jax.random.normal(jax.random.PRNGKey(4), (256, 64)) * 0.05
+    y_fp = x @ w
+    e_naive = float(jnp.mean((M.qmatmul(x, w, M.QuantConfig(method="naive")) - y_fp) ** 2))
+    e_comb = float(jnp.mean((M.qmatmul(x, w, M.QuantConfig(method="muxq_smooth")) - y_fp) ** 2))
+    assert e_comb < e_naive
+
+
+# ---- calibration ----------------------------------------------------------
+
+def test_calibration_stats_mask():
+    stats = O.CalibrationStats()
+    x, idx = make_outlier_matrix()
+    stats.update("site", x)
+    stats.update("site", x * 0.5)
+    mask = stats.masks(6.0)["site"]
+    assert set(np.nonzero(mask)[0]) == set(idx)
+
+
+def test_calibration_save_load(tmp_path):
+    stats = O.CalibrationStats()
+    x, _ = make_outlier_matrix()
+    stats.update("a/b", x)
+    p = str(tmp_path / "calib.npz")
+    stats.save(p)
+    loaded = O.CalibrationStats.load(p)
+    np.testing.assert_allclose(loaded.sites["a/b"].absmax, stats.sites["a/b"].absmax)

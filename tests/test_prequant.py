@@ -1,0 +1,100 @@
+"""Offline weight pre-quantization (deployment path) tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.context import FpCtx, QuantCtx
+from repro.core.muxq import QuantConfig
+from repro.core.prequant import prequantize_params, prequant_bytes
+from repro.models import init_params, forward, decode_step
+from repro.models.attention import init_cache
+
+QCFG = QuantConfig(method="muxq", real_int8=True, act_granularity="per_token",
+                   outlier_mode="dynamic", exp_factor=2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "dbrx-132b", "mamba2-370m",
+                                  "whisper-tiny"])
+def test_prequant_matches_on_the_fly(arch):
+    """Offline-int8 weights must agree with quantize-at-use (same grids):
+    identical math, so near-identical logits.  (Raw distance-to-fp is NOT a
+    stable metric on an untrained random net — tiny per-site grid deltas get
+    chaotically amplified through random attention.)"""
+    cfg = get_config(arch, reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pq = prequantize_params(cfg, params)
+    assert prequant_bytes(pq) < prequant_bytes(params)
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab_size)
+    extra = {}
+    if cfg.is_enc_dec:
+        extra["frames"] = jnp.zeros((2, cfg.n_audio_frames, cfg.d_model))
+    # naive policy so the comparison isolates the weight path (dynamic MUXQ
+    # masks would differ between the two runs on an untrained net)
+    q = QCFG.replace(method="naive", weight_granularity="per_channel")
+    lg_fly = forward(cfg, params, t, QuantCtx(q), extra=extra or None)["logits"]
+    lg_pq = forward(cfg, pq, t, QuantCtx(q), extra=extra or None)["logits"]
+    rel = float(jnp.linalg.norm(lg_pq - lg_fly) / jnp.linalg.norm(lg_fly))
+    assert rel < 5e-3, rel
+    assert bool(jnp.all(jnp.isfinite(lg_pq)))
+
+
+def test_prequant_weight_leaves_are_int8():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pq = prequantize_params(cfg, params)
+    assert pq["layers"]["attn"]["wqkv"]["q"].dtype == jnp.int8
+    assert pq["layers"]["mlp"]["wi"]["q"].dtype == jnp.int8
+    # per-layer scales: not shared across the stacked dim
+    s = pq["layers"]["attn"]["wqkv"]["s"]
+    assert s.shape[0] == cfg.n_layers and s.shape[-2] == 1
+    # non-weight leaves untouched
+    assert pq["embed"].dtype == params["embed"].dtype
+
+
+def test_fpctx_dequant_fallback_matches_manual():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pq = prequantize_params(cfg, params)
+    w = pq["layers"]["attn"]["wqkv"]
+    manual = (w["q"][0].astype(jnp.float32) * w["s"][0])
+    x = jax.random.normal(jax.random.PRNGKey(2), (4, cfg.d_model))
+    np.testing.assert_allclose(np.asarray(FpCtx()("attn_qkv", x, {"q": w["q"][0], "s": w["s"][0]})),
+                               np.asarray(x @ manual), rtol=1e-5, atol=1e-5)
+
+
+def test_prequant_decode_runs():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pq = prequantize_params(cfg, params)
+    ctx = QuantCtx(QCFG)
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab_size)
+    cache = init_cache(cfg, 2, 16, dtype=jnp.float32)
+    out = forward(cfg, pq, t[:, :8], ctx, cache=cache)
+    lg, _ = decode_step(cfg, pq, t[:, 8:9], out["cache"], ctx)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """INT8 KV cache decode must track the fp-cache decode closely."""
+    from repro.serve.kvcache import init_int8_cache
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    t = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, cfg.vocab_size)
+    # fp cache path
+    cache = init_cache(cfg, 2, 16, dtype=jnp.float32)
+    out = forward(cfg, params, t[:, :8], cache=cache)
+    lg_fp, _ = decode_step(cfg, params, t[:, 8:9], out["cache"])
+    # int8 cache path: quantize the prefilled cache, then decode
+    from repro.serve.kvcache import quantize_kv
+    qc = quantize_kv(out["cache"]["k"], out["cache"]["v"])
+    cache8 = {"k": qc["k"], "v": qc["v"], "k_scale": qc["k_scale"],
+              "v_scale": qc["v_scale"], "pos": out["cache"]["pos"]}
+    lg_8, c2 = decode_step(cfg, params, t[:, 8:9], cache8)
+    rel = float(jnp.linalg.norm(lg_8 - lg_fp) / jnp.linalg.norm(lg_fp))
+    assert rel < 0.05, rel
+    assert c2["k"].dtype == jnp.int8
+    # second step keeps the int8 layout
+    lg_9, _ = decode_step(cfg, params, t[:, :1], c2)
+    assert bool(jnp.all(jnp.isfinite(lg_9)))

@@ -1,0 +1,77 @@
+"""Unit + property tests for the abs-max quantization primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantizers as Q
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_token", "per_channel"])
+@pytest.mark.parametrize("bits", [4, 6, 8])
+def test_roundtrip_error_bound(granularity, bits):
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 64))
+    xq = Q.fake_quant(x, bits, granularity)
+    # error bounded by half a grid step of the relevant scale
+    scale = Q.absmax_scale(x, bits, granularity)
+    assert float(jnp.max(jnp.abs(xq - x))) <= float(jnp.max(scale)) * 0.5 + 1e-6
+
+
+def test_int_range():
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 16)) * 100
+    for bits in (2, 4, 8):
+        xi, _ = Q.quantize(x, bits)
+        assert int(jnp.max(jnp.abs(xi))) <= Q.qmax(bits)
+        assert xi.dtype == jnp.int8
+
+
+def test_scale_shapes():
+    x = jnp.ones((4, 8, 16))
+    assert Q.absmax_scale(x, 8, "per_tensor").shape == ()
+    assert Q.absmax_scale(x, 8, "per_token").shape == (4, 8, 1)
+    assert Q.absmax_scale(x, 8, "per_channel").shape == (1, 1, 16)
+
+
+def test_quantized_matmul_close_to_fp():
+    k = jax.random.PRNGKey(2)
+    x = jax.random.normal(k, (32, 128))
+    w = jax.random.normal(jax.random.PRNGKey(3), (128, 64)) * 0.1
+    y = Q.quantized_matmul(x, w)
+    y_fp = x @ w
+    rel = float(jnp.linalg.norm(y - y_fp) / jnp.linalg.norm(y_fp))
+    assert rel < 0.02
+
+
+def test_int_matmul_int32_accumulation():
+    xi = jnp.full((4, 512), 127, jnp.int8)
+    wi = jnp.full((512, 4), 127, jnp.int8)
+    out = Q.int_matmul(xi, wi)
+    assert out.dtype == jnp.int32
+    assert int(out[0, 0]) == 127 * 127 * 512  # would overflow int16
+
+
+@given(bits=st.integers(3, 6),
+       seed=st.integers(0, 2**16),
+       rows=st.integers(1, 8), cols=st.sampled_from([8, 32, 128]))
+def test_property_more_bits_less_error(bits, seed, rows, cols):
+    """MSE drops with precision.  +1 bit is not strictly monotone per
+    sample (rounding luck on small matrices), so compare a 2-bit gap with
+    5% slack — a real monotonicity violation still trips it."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (rows, cols))
+    e_lo = float(Q.quant_error(x, bits))
+    e_hi = float(Q.quant_error(x, bits + 2))
+    assert e_hi <= e_lo * 1.05 + 1e-12
+
+
+@given(seed=st.integers(0, 2**16), bits=st.integers(4, 8))
+def test_property_quantize_idempotent(seed, bits):
+    """fake_quant is a projection: applying it twice changes nothing."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (8, 16))
+    x1 = Q.fake_quant(x, bits)
+    scale = Q.absmax_scale(x, bits)
+    x2 = Q.fake_quant(x1, bits, scale=scale)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-6)
