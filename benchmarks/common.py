@@ -21,8 +21,9 @@ import numpy as np
 from repro.checkpoint import ckpt
 from repro.configs import get_config
 from repro.core.calibrate import calibrate
-from repro.core.context import QuantCtx
+from repro.core.context import as_ctx
 from repro.core.muxq import QuantConfig
+from repro.quantize import QuantArtifact, quantize_model
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.data.synthetic import corpus
 from repro.models import transformer as T
@@ -81,10 +82,16 @@ def calibrate_model(cfg, params, n_batches: int = 2):
     return stats, masks, smooths
 
 
-def perplexity(cfg, params, quant: Optional[QuantConfig], masks, smooths,
-               batches) -> Tuple[float, float]:
-    """Returns (ppl, us_per_eval_step)."""
-    ctx = None if quant is None else QuantCtx(quant, masks, smooths)
+def plan_artifact(cfg, params, stats, quant: QuantConfig) -> QuantArtifact:
+    """Fake-quant grid point: plan-only artifact (paper's eval protocol —
+    no weight packing) from pre-collected calibration stats."""
+    return quantize_model(cfg, params, stats, quant, prequantize=False)
+
+
+def perplexity(cfg, params, quant, batches) -> Tuple[float, float]:
+    """Returns (ppl, us_per_eval_step).  ``quant`` is None for the fp row or
+    a QuantArtifact (one object: policy + masks + smoothing state)."""
+    ctx, _ = as_ctx(quant)          # None -> FpCtx (the fp16 row)
 
     def eval_step(p, tokens, labels):
         out = T.forward(cfg, p, tokens, ctx, scan=False)

@@ -9,21 +9,23 @@ from benchmarks import common
 
 def run(emit=True):
     cfg, _, params, _ = common.get_trained_model()
-    _, masks, smooths = common.calibrate_model(cfg, params)
+    stats, _, _ = common.calibrate_model(cfg, params)
     batches = common.eval_batches()
     rows = []
     for exp in (1, 2, 3, 4):
         q = QuantConfig(method="muxq", act_bits=6, weight_bits=8,
                         act_granularity="per_tensor", outlier_mode="static",
                         exp_factor=exp)
-        ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+        art = common.plan_artifact(cfg, params, stats, q)
+        ppl, us = common.perplexity(cfg, params, art, batches)
         rows.append((f"exp_sweep/IA6/exp{exp}", us, f"ppl={ppl:.4f}"))
     # the combination claim (paper §5): MUXQ + SmoothQuant
     for method in ("smoothquant", "muxq_smooth"):
         q = QuantConfig(method=method, act_bits=6, weight_bits=8,
                         act_granularity="per_tensor", outlier_mode="static",
                         exp_factor=2)
-        ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+        art = common.plan_artifact(cfg, params, stats, q)
+        ppl, us = common.perplexity(cfg, params, art, batches)
         rows.append((f"exp_sweep/IA6/{method}", us, f"ppl={ppl:.4f}"))
     if emit:
         common.emit(rows)

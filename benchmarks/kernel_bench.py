@@ -53,6 +53,22 @@ def run(emit=True):
     rows.append((f"kernel/muxq_gemm_jnp_{m}x{k}x{n}", us,
                  f"gflops={flops / us / 1e3:.2f}"))
 
+    # artifact deployment path: QuantCtx over a pre-quantized {"q","s"} leaf
+    # (per-site policy resolution + MUXQ int32 channel multiplier, the site
+    # math ServeEngine runs per projection)
+    from repro.core.context import QuantCtx
+    from repro.core.muxq import QuantConfig
+    from repro.core.policy import SitePolicy
+    policy = SitePolicy.uniform(QuantConfig(
+        method="muxq", real_int8=True, outlier_mode="static",
+        act_granularity="per_token"))
+    ctx = QuantCtx(policy, masks={"site": mask})
+    wq = {"q": wi, "s": sw}
+    f_site = jax.jit(lambda a: ctx("site", a, wq))
+    us = _time(f_site, x)
+    rows.append((f"kernel/muxq_prequant_site_{m}x{k}x{n}", us,
+                 f"gflops={flops / us / 1e3:.2f}"))
+
     # analytic TPU-target speedup of the MUXQ path (uniform int8 on MXU)
     rows.append(("kernel/tpu_int8_speedup_analytic", 0.0,
                  f"x{PEAK_INT8 / PEAK_BF16:.1f}_over_bf16"))

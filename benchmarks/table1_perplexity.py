@@ -1,5 +1,8 @@
 """Paper Table 1: perplexity under (granularity x IA bits) for
-naive / MUXQ / LLM.int8() / fp16.  W=8 throughout (paper's setting)."""
+naive / MUXQ / LLM.int8() / fp16.  W=8 throughout (paper's setting).
+
+Each grid point is one plan-only QuantArtifact (calibration stats are
+collected once and reused across the whole grid)."""
 from __future__ import annotations
 
 from repro.core.muxq import QuantConfig
@@ -9,11 +12,11 @@ from benchmarks import common
 
 def run(emit=True):
     cfg, _, params, channels = common.get_trained_model()
-    _, masks, smooths = common.calibrate_model(cfg, params)
+    stats, _, _ = common.calibrate_model(cfg, params)
     batches = common.eval_batches()
 
     rows = []
-    ppl_fp, us = common.perplexity(cfg, params, None, masks, smooths, batches)
+    ppl_fp, us = common.perplexity(cfg, params, None, batches)
     rows.append((f"table1/fp16", us, f"ppl={ppl_fp:.4f}"))
 
     grid = [("per_tensor", [8, 7, 6, 5]), ("per_token", [8, 7, 6, 5])]
@@ -24,7 +27,8 @@ def run(emit=True):
                                 act_granularity=gran,
                                 weight_granularity="per_tensor" if gran == "per_tensor" else "per_channel",
                                 outlier_mode="static", exp_factor=2)
-                ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+                art = common.plan_artifact(cfg, params, stats, q)
+                ppl, us = common.perplexity(cfg, params, art, batches)
                 rows.append((f"table1/{gran}/IA{bits}/{method}", us,
                              f"ppl={ppl:.4f}"))
     if emit:

@@ -10,7 +10,7 @@ from benchmarks import common
 
 def run(emit=True):
     cfg, _, params, _ = common.get_trained_model()
-    _, masks, smooths = common.calibrate_model(cfg, params)
+    stats, _, _ = common.calibrate_model(cfg, params)
     batches = common.eval_batches()
 
     rows = []
@@ -20,7 +20,8 @@ def run(emit=True):
                             act_granularity="per_tensor",
                             weight_granularity="per_tensor",
                             outlier_mode="static", exp_factor=2)
-            ppl, us = common.perplexity(cfg, params, q, masks, smooths, batches)
+            art = common.plan_artifact(cfg, params, stats, q)
+            ppl, us = common.perplexity(cfg, params, art, batches)
             rows.append((f"table2/W{wbits}/{method}", us, f"ppl={ppl:.4f}"))
     if emit:
         common.emit(rows)

@@ -39,3 +39,30 @@ rel = float(jnp.mean((y_kernel - y_fp) ** 2) / jnp.mean(y_fp ** 2))
 print(f"muxq fused Pallas kernel (uniform INT8): rel_mse = {rel:.2e}")
 print("weights stored int8:", mw.w_int.dtype, mw.w_int.shape,
       "| aux GEMM cost: 0 extra FLOPs (block-scaled accumulator)")
+
+# --- 4. whole-model deployment: policy -> quantize_model -> ServeEngine ---
+from repro.configs import get_config
+from repro.core.policy import SitePolicy
+from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.models import transformer as T
+from repro.quantize import quantize_model
+from repro.serve.engine import Request, ServeEngine
+
+mcfg = get_config("gpt2-small", reduced=True).replace(
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=256, vocab_size=300)
+params = T.init_params(mcfg, jax.random.PRNGKey(0))
+pipe = TokenPipeline(PipelineConfig(seq_len=32, global_batch=2))
+
+# per-site policy: attention int8 per-tensor, MLP muxq per-token, the rest
+# falls through to the default (muxq fused, static calibrated masks)
+policy = SitePolicy(
+    default=QuantConfig(method="muxq", outlier_mode="static",
+                        act_granularity="per_token"),
+    rules=(("*attn*", QuantConfig(method="naive", act_bits=8)),
+           ("*mlp*", QuantConfig(method="muxq", outlier_mode="static",
+                                 act_granularity="per_token"))))
+artifact = quantize_model(mcfg, params, [next(pipe) for _ in range(2)], policy)
+engine = ServeEngine(mcfg, artifact, max_batch=2, s_max=64)
+engine.generate([Request("the model", max_new_tokens=4)])
+print("artifact:", len(artifact.masks), "masked sites,",
+      "packed int8 weights:", artifact.prequantized)

@@ -9,9 +9,10 @@ import jax
 
 from repro.configs import get_config
 from repro.core.muxq import QuantConfig
-from repro.data.pipeline import PipelineConfig
+from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import transformer as T
 from repro.optim.adamw import AdamWConfig
+from repro.quantize import quantize_model
 from repro.serve.engine import Request, ServeEngine
 from repro.train.trainer import TrainConfig, Trainer
 
@@ -31,12 +32,18 @@ params = trainer.params
 prompts = ["the model computes", "a kernel shards the", "every channel",
            "the optimizer quantizes"]
 
-for name, quant in [
-    ("fp", None),
-    ("muxq-int8", QuantConfig(method="muxq", act_granularity="per_token",
-                              outlier_mode="dynamic", exp_factor=2)),
+# three-line deployment path: policy -> quantize_model -> ServeEngine(artifact)
+calib = TokenPipeline(PipelineConfig(seq_len=64, global_batch=4, seed=7))
+artifact = quantize_model(
+    cfg, params, [next(calib) for _ in range(2)],
+    QuantConfig(method="muxq", act_granularity="per_token",
+                outlier_mode="static", exp_factor=2))
+
+for name, engine_params, quant in [
+    ("fp", params, None),
+    ("muxq-int8 artifact (offline int8 weights)", artifact, None),
 ]:
-    eng = ServeEngine(cfg, params, max_batch=2, s_max=96, quant=quant)
+    eng = ServeEngine(cfg, engine_params, max_batch=2, s_max=96, quant=quant)
     reqs = [Request(p, max_new_tokens=12) for p in prompts]
     t0 = time.perf_counter()
     eng.generate(reqs)

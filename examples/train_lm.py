@@ -13,8 +13,8 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core.calibrate import calibrate
-from repro.core.context import QuantCtx
 from repro.core.muxq import QuantConfig
+from repro.quantize import quantize_model
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import transformer as T
 from repro.models.common import cross_entropy
@@ -48,13 +48,15 @@ params = inject_outliers(cfg, trainer.params,
                          pick_outlier_channels(cfg, 6, seed=1), 20.0)
 pipe = TokenPipeline(PipelineConfig(seq_len=128, global_batch=8, seed=99))
 batches = [pipe.batch_at(i) for i in range(4)]
-_, masks, smooths = calibrate(
+stats, _, _ = calibrate(
     lambda p, b, ctx: T.forward(cfg, p, jnp.asarray(b["tokens"]), ctx, scan=False),
     params, batches[:1])
 
 
 def ppl(quant):
-    ctx = None if quant is None else QuantCtx(quant, masks, smooths)
+    # fake-quant evaluation: plan-only artifact (no weight packing)
+    ctx = None if quant is None else quantize_model(
+        cfg, params, stats, quant, prequantize=False).ctx()
     losses = []
     for b in batches:
         o = T.forward(cfg, params, jnp.asarray(b["tokens"]), ctx, scan=False)

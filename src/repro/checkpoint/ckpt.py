@@ -45,6 +45,61 @@ def _unflatten_into(template, flat: Dict[str, np.ndarray]):
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _nest(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    """Rebuild a nested-dict tree from '/'-joined flat keys (inverse of
+    ``_flatten`` for dict-only trees — which is what ``init_params`` and the
+    pre-quantized weight trees are)."""
+    root: Dict[str, Any] = {}
+    for key, val in flat.items():
+        parts = key.split("/")
+        d = root
+        for p in parts[:-1]:
+            d = d.setdefault(p, {})
+        d[parts[-1]] = val
+    return root
+
+
+def save_bundle(path: str, npz_groups: Dict[str, Dict[str, np.ndarray]],
+                meta: Dict[str, Any]) -> Path:
+    """Atomic directory bundle: one ``<group>.npz`` per group + meta.json,
+    published via tmp-dir + rename (same crash-safety contract as ``save``).
+    Empty groups are skipped on write and restored as {} on load."""
+    final = Path(path)
+    final.parent.mkdir(parents=True, exist_ok=True)
+    tmp = Path(tempfile.mkdtemp(dir=final.parent, prefix=".tmp_"))
+    try:
+        for group, arrays in npz_groups.items():
+            if arrays:
+                np.savez(tmp / f"{group}.npz",
+                         **{k: np.asarray(v) for k, v in arrays.items()})
+        (tmp / "meta.json").write_text(json.dumps(meta, default=str))
+        # never destroy the previous good copy before the new one lands:
+        # move it aside, publish, then drop the old one
+        old = final.parent / (final.name + ".old")
+        if final.exists():
+            if old.exists():
+                shutil.rmtree(old)
+            os.rename(final, old)
+        os.replace(tmp, final)                   # atomic publish
+        shutil.rmtree(old, ignore_errors=True)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def load_bundle(path: str, groups) -> Tuple[Dict[str, Dict[str, np.ndarray]],
+                                            Dict[str, Any]]:
+    """Load a ``save_bundle`` directory: ({group: {key: array}}, meta)."""
+    d = Path(path)
+    out: Dict[str, Dict[str, np.ndarray]] = {}
+    for group in groups:
+        f = d / f"{group}.npz"
+        out[group] = dict(np.load(f)) if f.exists() else {}
+    meta = json.loads((d / "meta.json").read_text())
+    return out, meta
+
+
 def save(ckpt_dir: str, step: int, params, opt_state=None,
          extra: Optional[Dict[str, Any]] = None, keep: int = 3) -> Path:
     base = Path(ckpt_dir)

@@ -1,4 +1,5 @@
 """MUXQ core: quantizers, outlier handling, decomposition, baselines."""
 from repro.core.muxq import QuantConfig, FP16, qmatmul, decompose, reconstruct  # noqa: F401
-from repro.core.context import FpCtx, CollectCtx, QuantCtx  # noqa: F401
+from repro.core.policy import SitePolicy, as_policy  # noqa: F401
+from repro.core.context import FpCtx, CollectCtx, QuantCtx, as_ctx  # noqa: F401
 from repro.core.outliers import outlier_mask, CalibrationStats  # noqa: F401

@@ -18,13 +18,27 @@ Contexts:
   FpCtx      — plain matmul (FP16 baseline row of Table 1).
   CollectCtx — records per-channel activation stats (calibration pass).
                MUST run eagerly / unscanned: it mutates a host-side dict.
-  QuantCtx   — applies a QuantConfig; resolves static masks / smoothing
-               factors by site name, or accepts them as explicit args when
-               running under ``lax.scan`` (host dict lookups don't trace).
+  QuantCtx   — resolves a per-site QuantConfig from a SitePolicy (a single
+               QuantConfig means "uniform policy") plus static masks /
+               smoothing state, by site name on the eager path or via
+               explicit args when running under ``lax.scan`` (host dict
+               lookups don't trace).
+
+Smoothing conventions (two distinct vectors ride under one name):
+  * ``smooths`` host dict / ``smooth=`` into ``qmatmul``: the *calibrated
+    activation abs-max* — SmoothQuant factors are derived live from it and
+    the raw weight (quantize-at-use only).
+  * ``smooth=`` argument into the ctx (scanned ``{site}@smooth`` qparams)
+    and the ``smooth_factors`` dict of a ``QuantArtifact``: the *final
+    per-channel divisor* s.  The ctx applies X/s itself; for pre-quantized
+    weights ``quantize_model`` already folded s*W into the packed int8
+    tensor, so applying the hint-based derivation again would be wrong —
+    a smooth-method site with packed weights and no factor raises instead
+    of silently serving un-smoothed results.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -32,6 +46,9 @@ import numpy as np
 from repro.core import quantizers as Q
 from repro.core.muxq import QuantConfig, qmatmul
 from repro.core.outliers import CalibrationStats
+from repro.core.policy import SitePolicy, as_policy
+
+_SMOOTH_METHODS = ("smoothquant", "muxq_smooth")
 
 
 def _is_prequant(w) -> bool:
@@ -98,37 +115,115 @@ class CollectCtx:
 class QuantCtx:
     quantized = True
 
-    def __init__(self, cfg: QuantConfig,
+    def __init__(self, quant,
                  masks: Optional[Dict[str, np.ndarray]] = None,
-                 smooths: Optional[Dict[str, np.ndarray]] = None) -> None:
-        self.cfg = cfg
+                 smooths: Optional[Dict[str, np.ndarray]] = None,
+                 smooth_factors: Optional[Dict[str, np.ndarray]] = None) -> None:
+        """``quant`` is a QuantConfig (uniform policy), a SitePolicy, or a
+        ``repro.quantize.QuantArtifact`` (duck-typed: supplies policy, masks,
+        act-absmax and folded smooth factors in one object)."""
+        if isinstance(quant, (QuantConfig, SitePolicy)):
+            self.policy = as_policy(quant)
+        else:  # QuantArtifact (duck-typed to avoid a core -> repro.quantize dep)
+            self.policy = quant.policy
+            masks = quant.masks if masks is None else masks
+            smooths = quant.act_absmax if smooths is None else smooths
+            smooth_factors = (quant.smooth_factors if smooth_factors is None
+                              else smooth_factors)
+        self.cfg = self.policy.default          # back-compat accessor
         self.masks = masks or {}
         self.smooths = smooths or {}
+        self.smooth_factors = smooth_factors or {}
 
-    def _resolve(self, name, mask, smooth):
-        if mask is None and self.cfg.outlier_mode == "static":
+    # -- per-site state resolution (host dicts: eager path only) ------------
+
+    def _site(self, name, cfg: QuantConfig, mask, smooth
+              ) -> Tuple[Optional[jnp.ndarray], Optional[jnp.ndarray],
+                         Optional[jnp.ndarray]]:
+        """Returns (mask, factor, hint): static outlier mask, final smoothing
+        divisor (scan arg or artifact), calibrated act-absmax (legacy)."""
+        if mask is None and cfg.outlier_mode == "static":
             m = self.masks.get(name)
             mask = None if m is None else jnp.asarray(m)
-        if smooth is None:
-            s = self.smooths.get(name)
-            smooth = None if s is None else jnp.asarray(s)
-        return mask, smooth
+        factor = smooth if smooth is not None else self.smooth_factors.get(name)
+        if factor is not None:
+            factor = jnp.asarray(factor)
+        hint = self.smooths.get(name)
+        hint = None if hint is None else jnp.asarray(hint)
+        return mask, factor, hint
+
+    @staticmethod
+    def _smooth_base(cfg: QuantConfig) -> QuantConfig:
+        return cfg.replace(
+            method="naive" if cfg.method == "smoothquant" else "muxq")
 
     def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
-        mask, smooth = self._resolve(name, mask, smooth)
+        cfg = self.policy.resolve(name)
+        if cfg.method == "fp":
+            return x @ _dense_w(w, x.dtype)
+        mask, factor, hint = self._site(name, cfg, mask, smooth)
+
+        if cfg.method in _SMOOTH_METHODS:
+            if factor is not None:
+                x = (x / factor).astype(x.dtype)
+                cfg = self._smooth_base(cfg)
+                if _is_prequant(w):     # s*W folded at pack time
+                    return _prequant_matmul(x, w, cfg, mask)
+                w = (w * factor[:, None]).astype(w.dtype)
+            elif _is_prequant(w):
+                raise RuntimeError(
+                    f"site {name!r}: method {cfg.method!r} with pre-quantized "
+                    "weights needs folded smooth factors (build the packed "
+                    "tree via repro.quantize.quantize_model)")
+            # else: quantize-at-use — qmatmul derives factors from the hint
+
         if _is_prequant(w):
-            return _prequant_matmul(x, w, self.cfg, mask)
-        return qmatmul(x, w.astype(x.dtype), self.cfg, mask=mask, smooth=smooth)
+            return _prequant_matmul(x, w, cfg, mask)
+        return qmatmul(x, w.astype(x.dtype), cfg, mask=mask, smooth=hint)
 
     def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
         """Quantized per-expert matmul: vmap the 2-D policy over the expert
         axis (per-expert weight scales, shared outlier mask — DESIGN.md §5)."""
         import jax
-        mask, smooth = self._resolve(name, mask, smooth)
+        cfg = self.policy.resolve(name)
+        if cfg.method == "fp":
+            return jnp.einsum("ecd,edf->ecf", x, _dense_w(w, x.dtype))
+        mask, factor, hint = self._site(name, cfg, mask, smooth)
+
+        if cfg.method in _SMOOTH_METHODS:
+            if factor is not None:
+                x = (x / factor).astype(x.dtype)
+                cfg = self._smooth_base(cfg)
+                if not _is_prequant(w):
+                    w = (w * factor[None, :, None]).astype(w.dtype)
+            elif _is_prequant(w):
+                raise RuntimeError(
+                    f"site {name!r}: method {cfg.method!r} with pre-quantized "
+                    "weights needs folded smooth factors (build the packed "
+                    "tree via repro.quantize.quantize_model)")
+
         if _is_prequant(w):
             fn = lambda xe, qe, se: _prequant_matmul(xe, {"q": qe, "s": se},
-                                                     self.cfg, mask)
+                                                     cfg, mask)
             return jax.vmap(fn)(x, w["q"], w["s"])
-        fn = lambda xe, we: qmatmul(xe, we.astype(x.dtype), self.cfg,
-                                    mask=mask, smooth=smooth)
+        fn = lambda xe, we: qmatmul(xe, we.astype(x.dtype), cfg,
+                                    mask=mask, smooth=hint)
         return jax.vmap(fn)(x, w)
+
+
+def as_ctx(quant) -> Tuple[object, Optional[Dict[str, jnp.ndarray]]]:
+    """Normalize any quant spec to (ctx, scan_qparams).
+
+    ``quant``: None | QuantConfig | SitePolicy | QuantArtifact.  The second
+    element is the stacked {site: [L, ch]} qparams tree for scanned layer
+    loops (only a QuantArtifact carries one — eager paths resolve per-site
+    state from the ctx's host dicts instead).
+    """
+    if quant is None:
+        return FpCtx(), None
+    if isinstance(quant, QuantConfig):
+        return (FpCtx(), None) if quant.method == "fp" else (QuantCtx(quant), None)
+    if isinstance(quant, SitePolicy):
+        return (FpCtx(), None) if quant.is_fp() else (QuantCtx(quant), None)
+    # QuantArtifact
+    return QuantCtx(quant), getattr(quant, "scan_qparams", None) or None

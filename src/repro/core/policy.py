@@ -1,0 +1,118 @@
+"""Per-site quantization policy resolution.
+
+A model is a set of named matmul *sites* (the ``ctx(name, ...)`` call sites:
+``attn_qkv``, ``mlp_up``, ... — prefixed ``layer{i}/`` on the eager /
+calibration path, bare under ``lax.scan``).  A :class:`SitePolicy` maps site
+names to :class:`~repro.core.muxq.QuantConfig` so one model can mix methods,
+bit-widths and granularities per site (the paper's Table 1/2 grids, or
+deployment mixes like "attention int8 per-tensor, MLP int4 per-channel").
+
+Resolution precedence (most specific wins):
+  1. an exact-name rule (pattern contains no glob metacharacters)
+  2. the first matching glob rule, in declaration order
+  3. the default config
+
+Pattern notes: matching is ``fnmatch``-style and a ``*`` crosses ``/``, so
+``*attn*`` matches both ``attn_qkv`` (scan path) and ``layer3/attn_qkv``
+(eager path).  Layer-targeted rules (``layer0/*``) only bind on the eager
+path — under scan every layer shares one trace and sites carry bare names.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.muxq import QuantConfig
+
+_GLOB_CHARS = set("*?[]")
+
+_SMOOTH_METHODS = ("smoothquant", "muxq_smooth")
+
+
+def _is_glob(pattern: str) -> bool:
+    return any(c in _GLOB_CHARS for c in pattern)
+
+
+@dataclasses.dataclass(frozen=True)
+class SitePolicy:
+    """Ordered (pattern -> QuantConfig) table with a default.
+
+    ``rules`` is a tuple of (pattern, config); construction accepts any
+    sequence of pairs or a dict (insertion order preserved).
+    """
+    default: QuantConfig = QuantConfig()
+    rules: Tuple[Tuple[str, QuantConfig], ...] = ()
+
+    def __post_init__(self):
+        rules = self.rules
+        if isinstance(rules, dict):
+            rules = tuple(rules.items())
+        object.__setattr__(self, "rules", tuple((str(p), c) for p, c in rules))
+
+    # -- construction helpers ------------------------------------------------
+
+    @classmethod
+    def uniform(cls, cfg: QuantConfig) -> "SitePolicy":
+        """Single-config policy (every site gets ``cfg``)."""
+        return cls(default=cfg)
+
+    def with_rule(self, pattern: str, cfg: QuantConfig) -> "SitePolicy":
+        return dataclasses.replace(self, rules=self.rules + ((pattern, cfg),))
+
+    # -- resolution ----------------------------------------------------------
+
+    def resolve(self, site: str) -> QuantConfig:
+        """Per-site config: exact rule > first matching glob > default."""
+        glob_hit: Optional[QuantConfig] = None
+        for pattern, cfg in self.rules:
+            if _is_glob(pattern):
+                if glob_hit is None and fnmatch.fnmatchcase(site, pattern):
+                    glob_hit = cfg
+            elif pattern == site:
+                return cfg
+        return glob_hit if glob_hit is not None else self.default
+
+    def configs(self) -> List[QuantConfig]:
+        return [self.default] + [c for _, c in self.rules]
+
+    # -- planning predicates (what does calibration need to produce?) --------
+
+    def needs_static_masks(self) -> bool:
+        return any(c.outlier_mode == "static" and c.method != "fp"
+                   for c in self.configs())
+
+    def needs_smoothing(self) -> bool:
+        return any(c.method in _SMOOTH_METHODS for c in self.configs())
+
+    def needs_calibration(self) -> bool:
+        return self.needs_static_masks() or self.needs_smoothing()
+
+    def is_fp(self) -> bool:
+        return all(c.method == "fp" for c in self.configs())
+
+    # -- serialization -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {"default": dataclasses.asdict(self.default),
+                "rules": [[p, dataclasses.asdict(c)] for p, c in self.rules]}
+
+    @classmethod
+    def from_json(cls, obj: dict) -> "SitePolicy":
+        return cls(default=QuantConfig(**obj["default"]),
+                   rules=tuple((p, QuantConfig(**c)) for p, c in obj["rules"]))
+
+
+Quantish = Union[None, QuantConfig, SitePolicy]
+
+
+def as_policy(quant: Quantish) -> SitePolicy:
+    """Normalize any quant spec (None / QuantConfig / SitePolicy) to a
+    SitePolicy.  ``None`` becomes an all-fp policy."""
+    if quant is None:
+        return SitePolicy.uniform(QuantConfig(method="fp"))
+    if isinstance(quant, SitePolicy):
+        return quant
+    if isinstance(quant, QuantConfig):
+        return SitePolicy.uniform(quant)
+    raise TypeError(f"cannot interpret {type(quant).__name__} as a quant policy")

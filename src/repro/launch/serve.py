@@ -1,5 +1,6 @@
-"""Serving launcher: load (or train a tiny) model, calibrate MUXQ, serve a
-batch of prompts through the engine."""
+"""Serving launcher: load (or train a tiny) model, quantize it into a
+MUXQ artifact (calibrate → plan → prequantize → pack), serve a batch of
+prompts through the engine."""
 from __future__ import annotations
 
 import argparse
@@ -7,10 +8,11 @@ import argparse
 import jax
 
 from repro.configs import get_config
-from repro.core.calibrate import calibrate
 from repro.core.muxq import QuantConfig
+from repro.core.policy import SitePolicy
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import transformer as T
+from repro.quantize import quantize_model
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -20,6 +22,8 @@ def main(argv=None) -> int:
     ap.add_argument("--quant", default="muxq",
                     choices=["fp", "naive", "muxq", "llm_int8", "smoothquant"])
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--save-artifact", default=None,
+                    help="directory to save the QuantArtifact bundle to")
     ap.add_argument("--prompts", nargs="*",
                     default=["the model computes", "a kernel shards"])
     args = ap.parse_args(argv)
@@ -27,16 +31,18 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch, reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
 
-    quant = None
-    masks = {}
-    if args.quant != "fp":
-        quant = QuantConfig(method=args.quant, act_granularity="per_token",
-                            outlier_mode="static")
+    if args.quant == "fp":
+        engine = ServeEngine(cfg, params, max_batch=2, s_max=128)
+    else:
+        policy = SitePolicy.uniform(QuantConfig(
+            method=args.quant, act_granularity="per_token",
+            outlier_mode="static"))
         pipe = TokenPipeline(PipelineConfig(seq_len=64, global_batch=2))
-        fwd = lambda p, b, ctx: T.forward(cfg, p, b["tokens"], ctx, scan=False)
-        _, masks, _ = calibrate(fwd, params, [next(pipe) for _ in range(2)])
-
-    engine = ServeEngine(cfg, params, max_batch=2, s_max=128, quant=quant)
+        artifact = quantize_model(cfg, params,
+                                  [next(pipe) for _ in range(2)], policy)
+        if args.save_artifact:
+            print(f"artifact saved to {artifact.save(args.save_artifact)}")
+        engine = ServeEngine(cfg, artifact, max_batch=2, s_max=128)
     reqs = [Request(p, max_new_tokens=args.max_new) for p in args.prompts]
     engine.generate(reqs)
     for r in reqs:

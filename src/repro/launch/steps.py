@@ -1,8 +1,10 @@
 """jit-able train / prefill / serve step builders with full sharding specs.
 
 These are what the launcher runs and what the dry-run lowers.  MUXQ is a
-first-class feature: pass a QuantConfig to run the quantized inference path
-(static calibrated masks via ``qparams``).
+first-class feature: ``quant`` accepts a QuantConfig (uniform policy), a
+SitePolicy (per-site mixes) or a ``repro.quantize.QuantArtifact`` (which
+also supplies the stacked scan qparams).  An explicit ``qparams`` argument
+(shape stand-ins for dry-run lowering) overrides the artifact's.
 """
 from __future__ import annotations
 
@@ -12,7 +14,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.context import FpCtx, QuantCtx
+from repro.core.context import as_ctx
 from repro.core.muxq import QuantConfig
 from repro.models import transformer as T
 from repro.models.attention import init_cache, n_attn_layers
@@ -21,19 +23,20 @@ from repro.models.ssm import init_ssm_state
 from repro.optim import adamw
 
 
-def _ctx_for(quant: Optional[QuantConfig]):
-    return FpCtx() if quant is None or quant.method == "fp" else QuantCtx(quant)
+def _ctx_for(quant, qparams=None):
+    ctx, art_qparams = as_ctx(quant)
+    return ctx, (qparams if qparams is not None else art_qparams)
 
 
 def make_train_step(cfg: ModelConfig, acfg: Optional[adamw.AdamWConfig] = None,
-                    quant: Optional[QuantConfig] = None, qparams=None,
+                    quant=None, qparams=None,
                     scan: bool = True, cast_bf16: bool = False):
     """``cast_bf16``: convert fp32 master params to bf16 BEFORE the layer
     scan, so FSDP weight all-gathers (fwd + remat + bwd) and the gradient
     reductions move bf16, not fp32 — halves the collective term on
     FSDP-dominated train cells (EXPERIMENTS.md §Perf qwen1.5-110b)."""
     acfg = acfg or adamw.AdamWConfig()
-    ctx = _ctx_for(quant)
+    ctx, qparams = _ctx_for(quant, qparams)
 
     def train_step(params, opt_state, batch):
         def loss_fn(p):
@@ -50,9 +53,9 @@ def make_train_step(cfg: ModelConfig, acfg: Optional[adamw.AdamWConfig] = None,
     return train_step
 
 
-def make_eval_step(cfg: ModelConfig, quant: Optional[QuantConfig] = None,
-                   qparams=None, scan: bool = True):
-    ctx = _ctx_for(quant)
+def make_eval_step(cfg: ModelConfig, quant=None, qparams=None,
+                   scan: bool = True):
+    ctx, qparams = _ctx_for(quant, qparams)
 
     def eval_step(params, batch):
         loss, parts = T.lm_loss(cfg, params, batch, ctx=ctx, scan=scan,
@@ -62,12 +65,12 @@ def make_eval_step(cfg: ModelConfig, quant: Optional[QuantConfig] = None,
     return eval_step
 
 
-def make_prefill_step(cfg: ModelConfig, seq_len: int,
-                      quant: Optional[QuantConfig] = None, qparams=None,
-                      kv_dtype=jnp.bfloat16, scan: Optional[bool] = None):
+def make_prefill_step(cfg: ModelConfig, seq_len: int, quant=None,
+                      qparams=None, kv_dtype=jnp.bfloat16,
+                      scan: Optional[bool] = None):
     """Full-sequence prefill: builds the KV cache in-step and returns the
     first sampled token + the cache."""
-    ctx = _ctx_for(quant)
+    ctx, qparams = _ctx_for(quant, qparams)
     if scan is None:
         scan = cfg.family != "hybrid"
     scan = scan and cfg.family != "hybrid"
@@ -98,10 +101,10 @@ def make_prefill_step(cfg: ModelConfig, seq_len: int,
     return prefill_step
 
 
-def make_serve_step(cfg: ModelConfig, quant: Optional[QuantConfig] = None,
-                    qparams=None, scan: Optional[bool] = None):
+def make_serve_step(cfg: ModelConfig, quant=None, qparams=None,
+                    scan: Optional[bool] = None):
     """One-token decode against the cache (the decode_* / long_* cells)."""
-    ctx = _ctx_for(quant)
+    ctx, qparams = _ctx_for(quant, qparams)
     if scan is None:
         scan = True
     use_scan = scan and cfg.family != "hybrid"

@@ -98,7 +98,8 @@ def attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     the updated cache (prefill)."""
     sq = sq or {}
     b, s, d = x.shape
-    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"))
+    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
+              smooth=sq.get("attn_qkv@smooth"))
     if "bqkv" in p:
         qkv = qkv + p["bqkv"].astype(x.dtype)
     q, k, v = _split_qkv(cfg, qkv)
@@ -114,7 +115,8 @@ def attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     bias = causal_bias(s, s, cfg.window_size, window_flag) if causal else None
     o = sdpa(cfg, q, k, v, bias)
     o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
-    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"))
+    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
+              smooth=sq.get("attn_out@smooth"))
     return out, cache
 
 
@@ -125,7 +127,8 @@ def attention_decode(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     sq = sq or {}
     b, one, d = x.shape
     pos = cache["pos"]
-    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"))
+    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
+              smooth=sq.get("attn_qkv@smooth"))
     if "bqkv" in p:
         qkv = qkv + p["bqkv"].astype(x.dtype)
     q, k, v = _split_qkv(cfg, qkv)
@@ -174,7 +177,8 @@ def attention_decode(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     bias = jnp.where(allow, 0.0, NEG_INF)[None, None, None, :].astype(jnp.float32)
     o = sdpa(cfg, q, kk, vv, bias)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
-    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"))
+    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
+              smooth=sq.get("attn_out@smooth"))
     return out, new_cache
 
 
@@ -185,14 +189,17 @@ def cross_attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     sq = sq or {}
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
-    q = ctx("cross_q", x, p["wq"], mask=sq.get("cross_q"))
-    kvm = ctx("cross_kv", memory, p["wkv"], mask=sq.get("cross_kv"))
+    q = ctx("cross_q", x, p["wq"], mask=sq.get("cross_q"),
+            smooth=sq.get("cross_q@smooth"))
+    kvm = ctx("cross_kv", memory, p["wkv"], mask=sq.get("cross_kv"),
+              smooth=sq.get("cross_kv@smooth"))
     sm = memory.shape[1]
     q = q.reshape(b, s, h, dh)
     k = kvm[..., : kv * dh].reshape(b, sm, kv, dh)
     v = kvm[..., kv * dh:].reshape(b, sm, kv, dh)
     o = sdpa(cfg, q, k, v, None).reshape(b, s, h * dh)
-    return ctx("cross_out", o, p["wo"], mask=sq.get("cross_out"))
+    return ctx("cross_out", o, p["wo"], mask=sq.get("cross_out"),
+               smooth=sq.get("cross_out@smooth"))
 
 
 def n_attn_layers(cfg: ModelConfig) -> int:

@@ -21,7 +21,8 @@ def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> dict:
 def mlp(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         sq: Optional[Dict] = None) -> jnp.ndarray:
     sq = sq or {}
-    h = ctx("mlp_up", x, p["wi"], mask=sq.get("mlp_up"))
+    h = ctx("mlp_up", x, p["wi"], mask=sq.get("mlp_up"),
+            smooth=sq.get("mlp_up@smooth"))
     if cfg.mlp_type == "swiglu":
         gate, up = jnp.split(h, 2, axis=-1)
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
@@ -29,7 +30,8 @@ def mlp(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         if "bi" in p:
             h = h + p["bi"].astype(x.dtype)
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
-    out = ctx("mlp_down", h, p["wo"], mask=sq.get("mlp_down"))
+    out = ctx("mlp_down", h, p["wo"], mask=sq.get("mlp_down"),
+              smooth=sq.get("mlp_down@smooth"))
     if "bo" in p:
         out = out + p["bo"].astype(x.dtype)
     return out

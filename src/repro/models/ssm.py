@@ -123,8 +123,10 @@ def ssd_chunked(cfg: ModelConfig, x: jnp.ndarray, dt: jnp.ndarray,
 def _project(cfg, p_, ctx, x, sq):
     """Run both projections; returns z, xc(raw), bc(raw), dt(raw)."""
     di, n, h, p = _dims(cfg)
-    zx = ctx("ssm_in_zx", x, p_["in_zx"], mask=sq.get("ssm_in_zx"))
-    bcdt = ctx("ssm_in_bcdt", x, p_["in_bcdt"], mask=sq.get("ssm_in_bcdt"))
+    zx = ctx("ssm_in_zx", x, p_["in_zx"], mask=sq.get("ssm_in_zx"),
+             smooth=sq.get("ssm_in_zx@smooth"))
+    bcdt = ctx("ssm_in_bcdt", x, p_["in_bcdt"], mask=sq.get("ssm_in_bcdt"),
+               smooth=sq.get("ssm_in_bcdt@smooth"))
     z, xc = zx[..., :di], zx[..., di:]
     bc, dt = bcdt[..., : 2 * n], bcdt[..., 2 * n:]
     return z, xc, bc, dt
@@ -160,7 +162,8 @@ def ssm_block(cfg: ModelConfig, p_: dict, ctx, x: jnp.ndarray,
     y = y.reshape(b, s, di)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)      # gate
     y = rmsnorm(y, p_["norm_gain"], cfg.norm_eps)
-    out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"))
+    out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"),
+              smooth=sq.get("ssm_out@smooth"))
 
     new_state = None
     if want_state:
@@ -205,7 +208,8 @@ def ssm_decode(cfg: ModelConfig, p_: dict, ctx, x: jnp.ndarray,
     y = y.reshape(b, 1, di).astype(x.dtype)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
     y = rmsnorm(y, p_["norm_gain"], cfg.norm_eps)
-    out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"))
+    out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"),
+              smooth=sq.get("ssm_out@smooth"))
     return out, {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:], "ssm": s_new}
 
 

@@ -1,0 +1,256 @@
+"""First-class model quantization: calibrate → plan → prequantize → pack.
+
+The single entrypoint :func:`quantize_model` turns (model cfg, params,
+calibration data, :class:`~repro.core.policy.SitePolicy`) into one saveable
+:class:`QuantArtifact` bundling everything the runtime needs:
+
+  * the resolved per-site policy table,
+  * calibrated static outlier masks (``{eager site: [ch] bool}``),
+  * calibrated activation abs-max per site (SmoothQuant raw material),
+  * folded smoothing divisors for smooth-method sites,
+  * the offline-packed int8 weight tree (``{"q", "s"}`` leaves), and
+  * stacked ``[L, ch]`` qparams for ``lax.scan``-ed layer loops
+    (masks under the bare site name, divisors under ``{site}@smooth``).
+
+Every consumer — ``ServeEngine``, the launch step builders, benchmarks —
+takes the artifact directly; there is no ``(quant, qparams, masks, smooths)``
+four-tuple plumbing.  ``save``/``load`` use the atomic bundle machinery in
+``repro.checkpoint.ckpt``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, Iterable, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import smoothquant as SQ
+from repro.core.context import QuantCtx
+from repro.core.muxq import QuantConfig
+from repro.core.outliers import CalibrationStats
+from repro.core.policy import SitePolicy, as_policy
+from repro.core.prequant import prequantize_params
+
+_SMOOTH_METHODS = ("smoothquant", "muxq_smooth")
+_FORMAT_VERSION = 1
+
+# ctx site base name -> weight-leaf path inside one layer's param subtree.
+# "mlp_*" has a fallback: in MoE layers the shared expert reuses mlp() (its
+# eager sites are layer{i}/mlp_up|down) but its weights live under
+# moe/shared/.
+_SITE_WEIGHT_PATH = {
+    "attn_qkv": ("attn", "wqkv"), "attn_out": ("attn", "wo"),
+    "cross_q": ("cross", "wq"), "cross_kv": ("cross", "wkv"),
+    "cross_out": ("cross", "wo"),
+    "mlp_up": ("mlp", "wi"), "mlp_down": ("mlp", "wo"),
+    "moe_up": ("moe", "wi"), "moe_down": ("moe", "wo"),
+    "ssm_in_zx": ("ssm", "in_zx"), "ssm_in_bcdt": ("ssm", "in_bcdt"),
+    "ssm_out": ("ssm", "out_proj"),
+}
+_SITE_WEIGHT_FALLBACK = {
+    "mlp_up": ("moe", "shared", "wi"), "mlp_down": ("moe", "shared", "wo"),
+}
+
+_SITE_RE = re.compile(r"^(layer|enc|shared)(\d+)/(.+)$")
+
+
+def split_site(site: str):
+    """'layer3/mlp_up' -> ('layer', 3, 'mlp_up'); bare names -> (None, None, site)."""
+    m = _SITE_RE.match(site)
+    if m is None:
+        return None, None, site
+    return m.group(1), int(m.group(2)), m.group(3)
+
+
+def _site_weight(params, site: str) -> Optional[jnp.ndarray]:
+    """The 2-D [in_ch, flattened_out] weight consumed at an eager site, or
+    None when the site has no addressable weight leaf (unknown naming)."""
+    kind, idx, base = split_site(site)
+    path = _SITE_WEIGHT_PATH.get(base)
+    if path is None:
+        return None
+    root = {"layer": "layers", "enc": "enc_layers", "shared": "shared"}.get(kind)
+    if root is None:
+        return None
+    leaf = None
+    for candidate in (path, _SITE_WEIGHT_FALLBACK.get(base)):
+        if candidate is None:
+            continue
+        try:
+            node = params[root]
+            for p in candidate:
+                node = node[p]
+            leaf = node
+            break
+        except (KeyError, TypeError):
+            continue
+    if leaf is None:
+        return None
+    if root != "shared":
+        leaf = leaf[idx]                       # stacked [L, ...] -> this layer
+    # contraction axis is -2; flatten everything else into the out dim
+    leaf = jnp.moveaxis(jnp.asarray(leaf), -2, 0)
+    return leaf.reshape(leaf.shape[0], -1)
+
+
+@dataclasses.dataclass
+class QuantArtifact:
+    """Everything quantized execution needs, in one saveable object.
+
+    ``params`` is the offline-packed weight tree (int8 ``{"q","s"}`` leaves,
+    other leaves untouched) or None for quantize-at-use artifacts.
+    ``scan_qparams`` carries stacked per-layer state for scanned loops.
+    """
+    policy: SitePolicy
+    masks: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    act_absmax: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    smooth_factors: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    scan_qparams: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    params: Any = None
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def prequantized(self) -> bool:
+        return self.params is not None
+
+    def ctx(self) -> QuantCtx:
+        """A QuantCtx wired to this artifact (eager / unscanned paths)."""
+        return QuantCtx(self)
+
+    # -- persistence (atomic bundle dir via repro.checkpoint.ckpt) -----------
+
+    def save(self, path: str) -> str:
+        groups = {
+            "masks": self.masks,
+            "act_absmax": self.act_absmax,
+            "smooth_factors": self.smooth_factors,
+            "scan_qparams": self.scan_qparams,
+            "params": ckpt._flatten(self.params) if self.prequantized else {},
+        }
+        meta = {"format_version": _FORMAT_VERSION,
+                "policy": self.policy.to_json(),
+                "prequantized": self.prequantized,
+                **self.meta}
+        return str(ckpt.save_bundle(path, groups, meta))
+
+    @classmethod
+    def load(cls, path: str) -> "QuantArtifact":
+        groups, meta = ckpt.load_bundle(
+            path, ["masks", "act_absmax", "smooth_factors", "scan_qparams",
+                   "params"])
+        policy = SitePolicy.from_json(meta.pop("policy"))
+        version = meta.pop("format_version", None)
+        if version != _FORMAT_VERSION:
+            raise ValueError(f"unsupported artifact format {version!r}")
+        prequantized = meta.pop("prequantized", bool(groups["params"]))
+        params = ckpt._nest(groups["params"]) if prequantized else None
+        return cls(policy=policy, masks=groups["masks"],
+                   act_absmax=groups["act_absmax"],
+                   smooth_factors=groups["smooth_factors"],
+                   scan_qparams=groups["scan_qparams"],
+                   params=params, meta=meta)
+
+
+def _run_calibration(cfg, params, batches, forward) -> CalibrationStats:
+    from repro.core.calibrate import calibrate
+    if forward is None:
+        from repro.models import transformer as T
+        forward = lambda p, b, ctx: T.forward(
+            cfg, p, jnp.asarray(b["tokens"]), ctx, scan=False)
+    stats, _, _ = calibrate(forward, params, batches)
+    return stats
+
+
+def _scan_key(cfg, base: str) -> str:
+    """Bare qparams key the scanned model looks up for one eager site base.
+
+    In MoE layers the shared expert runs through mlp() — its eager sites are
+    'layer{i}/mlp_up|down' but moe() routes the scanned sq under
+    'moe_shared_up|down'."""
+    if getattr(cfg, "family", None) == "moe" and base in ("mlp_up", "mlp_down"):
+        return "moe_shared_" + base.split("_", 1)[1]
+    return base
+
+
+def _stack_qparams(cfg, masks: Dict[str, np.ndarray],
+                   factors: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """{bare site: [L, ch]} stacked state for scanned layer loops, built from
+    eager 'layer{i}/...' entries that cover every decoder layer."""
+    out: Dict[str, np.ndarray] = {}
+    for source, suffix in ((masks, ""), (factors, "@smooth")):
+        bases = {split_site(s)[2] for s in source
+                 if split_site(s)[0] == "layer"}
+        for base in sorted(bases):
+            vals = [source.get(f"layer{i}/{base}") for i in range(cfg.n_layers)]
+            if any(v is None for v in vals):
+                continue                # partial coverage: eager path only
+            out[_scan_key(cfg, base) + suffix] = np.stack(
+                [np.asarray(v) for v in vals])
+    return out
+
+
+def quantize_model(cfg, params,
+                   calib: Union[None, CalibrationStats, Iterable],
+                   policy: Union[QuantConfig, SitePolicy], *,
+                   forward=None, prequantize: bool = True) -> QuantArtifact:
+    """calibrate → plan → prequantize → pack, in one call.
+
+    ``calib`` is an iterable of batches (run eagerly through ``forward``,
+    default: the transformer LM forward), an already-collected
+    :class:`CalibrationStats`, or None when the policy needs no calibration
+    (all-dynamic, no smoothing).  ``prequantize=False`` skips weight packing
+    (the paper's fake-quant evaluation protocol — benchmark grids).
+    """
+    policy = as_policy(policy)
+    stats: Optional[CalibrationStats] = None
+    if isinstance(calib, CalibrationStats):
+        stats = calib
+    elif calib is not None:
+        stats = _run_calibration(cfg, params, calib, forward)
+    if stats is None and policy.needs_calibration():
+        raise ValueError("policy needs static masks / smoothing factors but "
+                         "no calibration data or stats were given")
+
+    # plan: resolve every calibrated site against the policy
+    masks: Dict[str, np.ndarray] = {}
+    absmax: Dict[str, np.ndarray] = {}
+    factors: Dict[str, np.ndarray] = {}
+    for site, st in (stats.sites.items() if stats else ()):
+        scfg = policy.resolve(site)
+        if scfg.method == "fp":
+            continue
+        absmax[site] = np.asarray(st.absmax, np.float32)
+        if scfg.outlier_mode == "static":
+            masks[site] = np.asarray(st.mask(scfg.outlier_threshold))
+        if scfg.method in _SMOOTH_METHODS:
+            w2 = _site_weight(params, site)
+            if w2 is None:
+                if prequantize:
+                    raise ValueError(
+                        f"cannot fold smoothing for site {site!r}: no "
+                        "addressable weight leaf (use prequantize=False)")
+                continue
+            factors[site] = np.asarray(
+                SQ.smoothing_factors(jnp.asarray(st.absmax), w2,
+                                     scfg.smooth_alpha), np.float32)
+
+    packed = None
+    if prequantize:
+        packed = prequantize_params(cfg, params, policy=policy,
+                                    smooth_factors=factors)
+
+    return QuantArtifact(
+        policy=policy, masks=masks, act_absmax=absmax, smooth_factors=factors,
+        scan_qparams=_stack_qparams(cfg, masks, factors), params=packed,
+        meta={"n_sites": len(absmax)})
+
+
+def save_artifact(artifact: QuantArtifact, path: str) -> str:
+    return artifact.save(path)
+
+
+def load_artifact(path: str) -> QuantArtifact:
+    return QuantArtifact.load(path)

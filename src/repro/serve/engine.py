@@ -14,12 +14,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.context import FpCtx, QuantCtx
-from repro.core.muxq import QuantConfig
+from repro.core.context import as_ctx
 from repro.data import tokenizer as tok
 from repro.models import transformer as T
 from repro.models.attention import init_cache
 from repro.models.common import ModelConfig
+from repro.quantize import QuantArtifact
 
 
 @dataclasses.dataclass
@@ -32,15 +32,30 @@ class Request:
 
 class ServeEngine:
     """CPU-scale reference engine (same step functions the dry-run lowers at
-    pod scale)."""
+    pod scale).
+
+    Quantized serving takes ONE object: ``ServeEngine(cfg, artifact)`` where
+    ``artifact`` is a prequantized :class:`repro.quantize.QuantArtifact`
+    (packed int8 weights + policy + calibrated state), or
+    ``ServeEngine(cfg, params, quant=spec)`` with ``spec`` any of
+    QuantConfig / SitePolicy / QuantArtifact for quantize-at-use.
+    """
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 s_max: int = 512, quant: Optional[QuantConfig] = None,
-                 qparams=None, greedy: bool = True):
+                 s_max: int = 512, quant=None, greedy: bool = True):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
+        if isinstance(params, QuantArtifact):
+            if quant is not None:
+                raise ValueError("pass either an artifact as params or a "
+                                 "quant spec, not both")
+            quant, params = params, params.params
+            if params is None:
+                raise ValueError("artifact carries no packed weights; build "
+                                 "it with prequantize=True or pass raw "
+                                 "params plus quant=artifact")
         self.cfg, self.params = cfg, params
         self.max_batch, self.s_max = max_batch, s_max
-        self.ctx = FpCtx() if quant is None else QuantCtx(quant)
+        self.ctx, qparams = as_ctx(quant)
         self.qparams = qparams
         self.greedy = greedy
 

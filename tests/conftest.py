@@ -7,3 +7,9 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# Optional dev deps (requirements-dev.txt): the property-test modules call
+# pytest.importorskip("hypothesis") at import, so a missing install degrades
+# to module-level skips instead of collection errors.  Nothing to do here —
+# this note is the contract; keep new hypothesis-using modules on the same
+# pattern.

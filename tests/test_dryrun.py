@@ -23,6 +23,7 @@ def run_with_devices(code: str, n: int = 8, timeout: int = 900) -> str:
     return out.stdout
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch,mode", [
     ("qwen2-0.5b", "train"), ("gemma2-9b", "train"), ("dbrx-132b", "train"),
     ("mamba2-370m", "train"), ("zamba2-1.2b", "train"), ("whisper-tiny", "train"),

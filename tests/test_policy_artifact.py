@@ -1,0 +1,261 @@
+"""SitePolicy resolution + QuantArtifact construction / persistence tests
+(the unified quantization API: policy -> quantize_model -> consumers)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.context import FpCtx, QuantCtx, as_ctx
+from repro.core.muxq import QuantConfig
+from repro.core.policy import SitePolicy, as_policy
+from repro.models import transformer as T
+from repro.quantize import QuantArtifact, quantize_model
+
+
+# ---------------------------------------------------------------------------
+# Policy resolution
+# ---------------------------------------------------------------------------
+
+INT8 = QuantConfig(method="naive", act_bits=8)
+INT4 = QuantConfig(method="naive", act_bits=4, weight_bits=4,
+                   weight_granularity="per_channel")
+MUXQ = QuantConfig(method="muxq", outlier_mode="static")
+
+
+def test_exact_beats_glob_beats_default():
+    pol = SitePolicy(default=MUXQ,
+                     rules=(("*mlp*", INT4),
+                            ("layer0/mlp_up", INT8)))  # exact declared LAST
+    assert pol.resolve("layer0/mlp_up") is INT8     # exact wins over glob
+    assert pol.resolve("layer1/mlp_up") is INT4     # glob
+    assert pol.resolve("layer1/attn_qkv") is MUXQ   # default
+
+
+def test_first_matching_glob_wins():
+    pol = SitePolicy(default=MUXQ, rules=(("*mlp*", INT4), ("*up", INT8)))
+    assert pol.resolve("layer0/mlp_up") is INT4
+    assert pol.resolve("layer0/moe_up") is INT8
+
+
+def test_policy_json_round_trip():
+    pol = SitePolicy(default=MUXQ, rules=(("*attn*", INT8), ("*mlp*", INT4)))
+    back = SitePolicy.from_json(pol.to_json())
+    assert back == pol
+    assert back.resolve("attn_qkv") == INT8
+
+
+def test_as_policy_and_planning_predicates():
+    assert as_policy(None).is_fp()
+    assert as_policy(INT8) == SitePolicy.uniform(INT8)
+    assert not as_policy(INT8).needs_calibration()
+    assert as_policy(MUXQ).needs_static_masks()
+    assert as_policy(QuantConfig(method="muxq_smooth")).needs_smoothing()
+
+
+def test_as_ctx_normalization():
+    ctx, qp = as_ctx(None)
+    assert isinstance(ctx, FpCtx) and qp is None
+    ctx, _ = as_ctx(MUXQ)
+    assert isinstance(ctx, QuantCtx)
+    assert ctx.policy.resolve("anything") == MUXQ
+
+
+# ---------------------------------------------------------------------------
+# Artifact construction + consumption
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("gpt2-small", reduced=True).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=120)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (2, 16))}
+               for _ in range(2)]
+    return cfg, params, batches
+
+
+MIXED = SitePolicy(
+    default=QuantConfig(method="muxq", outlier_mode="static",
+                        act_granularity="per_token"),
+    rules=(("*attn_qkv", QuantConfig(method="naive", act_bits=8,
+                                     weight_granularity="per_channel")),
+           ("*attn_out", QuantConfig(method="fp")),
+           ("*mlp_down", QuantConfig(method="muxq_smooth",
+                                     outlier_mode="static",
+                                     act_granularity="per_token"))))
+
+
+def test_quantize_model_plans_per_site(small_model):
+    cfg, params, batches = small_model
+    art = quantize_model(cfg, params, batches, MIXED)
+    assert art.prequantized
+    # fp sites are neither calibrated into the plan nor packed
+    assert not any(s.endswith("attn_out") for s in art.act_absmax)
+    assert hasattr(params["layers"]["attn"]["wo"], "dtype")
+    assert isinstance(art.params["layers"]["attn"]["wqkv"], dict)
+    assert art.params["layers"]["attn"]["wo"].dtype == \
+        params["layers"]["attn"]["wo"].dtype          # fp site passthrough
+    # smooth-method site got folded factors, one per layer
+    assert set(art.smooth_factors) == {"layer0/mlp_down", "layer1/mlp_down"}
+    # static masks only for static-mode sites (naive is dynamic by default)
+    assert all("mlp" in s for s in art.masks)
+    # stacked scan qparams cover every decoder layer
+    assert art.scan_qparams["mlp_down@smooth"].shape[0] == cfg.n_layers
+
+
+def test_artifact_save_load_bit_exact(tmp_path, small_model):
+    cfg, params, batches = small_model
+    art = quantize_model(cfg, params, batches, MIXED)
+    toks = jnp.asarray(batches[0]["tokens"])
+    lg = T.forward(cfg, art.params, toks, art.ctx(), scan=False)["logits"]
+    art.save(str(tmp_path / "artifact"))
+    art2 = QuantArtifact.load(str(tmp_path / "artifact"))
+    assert art2.policy == art.policy
+    lg2 = T.forward(cfg, art2.params, toks, art2.ctx(), scan=False)["logits"]
+    assert bool(jnp.array_equal(lg, lg2)), "round-trip must be bit-exact"
+
+
+def test_prequant_matches_quantize_at_use_mixed_policy(small_model):
+    """Offline packing at per-site (bits, granularity) must agree with
+    quantize-at-use under the same policy: same grids, near-identical
+    logits (smooth sites excluded — folding quantizes s*W vs W)."""
+    cfg, params, batches = small_model
+    pol = SitePolicy(
+        default=QuantConfig(method="muxq", outlier_mode="static",
+                            act_granularity="per_token",
+                            weight_granularity="per_channel"),
+        rules=(("*attn*", QuantConfig(method="naive", act_bits=8,
+                                      weight_granularity="per_tensor")),))
+    art_use = quantize_model(cfg, params, batches, pol, prequantize=False)
+    art_pq = quantize_model(cfg, params, batches, pol)
+    assert art_use.params is None and art_pq.prequantized
+    toks = jnp.asarray(batches[0]["tokens"])
+    lg_use = T.forward(cfg, params, toks, art_use.ctx(), scan=False)["logits"]
+    lg_pq = T.forward(cfg, art_pq.params, toks, art_pq.ctx(),
+                      scan=False)["logits"]
+    rel = float(jnp.linalg.norm(lg_pq - lg_use) / jnp.linalg.norm(lg_use))
+    assert rel < 5e-3, rel
+
+
+def test_eager_matches_scan_with_qparams(small_model):
+    """Scanned execution (stacked qparams, bare site names) must reproduce
+    the eager path (host-dict resolution, layer-prefixed names) whenever the
+    policy's rules match both name forms."""
+    cfg, params, batches = small_model
+    pol = SitePolicy(
+        default=QuantConfig(method="muxq", outlier_mode="static",
+                            act_granularity="per_token"),
+        rules=(("*mlp_down", QuantConfig(method="muxq_smooth",
+                                         outlier_mode="static",
+                                         act_granularity="per_token")),))
+    art = quantize_model(cfg, params, batches, pol)
+    toks = jnp.asarray(batches[0]["tokens"])
+    lg_eager = T.forward(cfg, art.params, toks, art.ctx(),
+                         scan=False)["logits"]
+    lg_scan = T.forward(cfg, art.params, toks, art.ctx(), scan=True,
+                        qparams=art.scan_qparams)["logits"]
+    np.testing.assert_allclose(np.asarray(lg_scan), np.asarray(lg_eager),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_smooth_on_prequant_path_applied_not_dropped(small_model):
+    """The satellite fix: muxq_smooth over packed weights must consume the
+    folded factors (and differ from plain muxq), not silently no-op."""
+    cfg, params, batches = small_model
+    smooth_pol = SitePolicy.uniform(QuantConfig(
+        method="muxq_smooth", outlier_mode="static",
+        act_granularity="per_tensor", act_bits=6))
+    plain_pol = SitePolicy.uniform(QuantConfig(
+        method="muxq", outlier_mode="static",
+        act_granularity="per_tensor", act_bits=6))
+    art_s = quantize_model(cfg, params, batches, smooth_pol)
+    art_p = quantize_model(cfg, params, batches, plain_pol)
+    assert art_s.smooth_factors, "smooth sites must carry folded factors"
+    toks = jnp.asarray(batches[0]["tokens"])
+    lg_s = T.forward(cfg, art_s.params, toks, art_s.ctx(), scan=False)["logits"]
+    lg_p = T.forward(cfg, art_p.params, toks, art_p.ctx(), scan=False)["logits"]
+    assert bool(jnp.all(jnp.isfinite(lg_s)))
+    assert not bool(jnp.array_equal(lg_s, lg_p))
+
+
+def test_prequant_smooth_without_factors_raises():
+    ctx = QuantCtx(QuantConfig(method="muxq_smooth"))
+    x = jnp.ones((2, 4))
+    w = {"q": jnp.ones((4, 3), jnp.int8), "s": jnp.ones((1, 3))}
+    with pytest.raises(RuntimeError, match="folded smooth factors"):
+        ctx("some_site", x, w)
+
+
+def test_serve_engine_takes_artifact(small_model):
+    from repro.serve.engine import Request, ServeEngine
+    cfg, params, batches = small_model
+    art = quantize_model(
+        cfg, params, batches,
+        QuantConfig(method="muxq", outlier_mode="static",
+                    act_granularity="per_token"))
+    eng = ServeEngine(cfg, art, max_batch=2, s_max=48)
+    reqs = [Request("the model", max_new_tokens=4)]
+    eng.generate(reqs)
+    assert reqs[0].done and len(reqs[0].out_tokens) >= 4
+
+
+def test_quantize_model_requires_calibration_when_static(small_model):
+    cfg, params, _ = small_model
+    with pytest.raises(ValueError, match="calibration"):
+        quantize_model(cfg, params, None, MUXQ)
+
+
+def test_layer_heterogeneous_pack_raises_not_silently_wrong(small_model):
+    """A layer-targeted smooth rule splits the stacked weight leaf's pack
+    config: packing must refuse (plan-only still works), not fold factors
+    for some layers and serve X/s against un-smoothed weights."""
+    cfg, params, batches = small_model
+    pol = SitePolicy(
+        default=QuantConfig(method="muxq", outlier_mode="static",
+                            act_granularity="per_token"),
+        rules=(("layer0/*", QuantConfig(method="smoothquant",
+                                        outlier_mode="static")),))
+    with pytest.raises(ValueError, match="layer-heterogeneous"):
+        quantize_model(cfg, params, batches, pol)
+    art = quantize_model(cfg, params, batches, pol, prequantize=False)
+    toks = jnp.asarray(batches[0]["tokens"])
+    lg = T.forward(cfg, params, toks, art.ctx(), scan=False)["logits"]
+    assert bool(jnp.all(jnp.isfinite(lg)))
+
+
+def test_hybrid_shared_weight_smooth_pack_raises():
+    """Hybrid shared-block weights are executed at several positions with
+    one tensor — per-instance smoothing factors cannot fold, so packing
+    must refuse instead of serving X/s against un-smoothed int8 weights."""
+    cfg = get_config("zamba2-1.2b", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (1, 8))}]
+    pol = SitePolicy.uniform(QuantConfig(method="smoothquant",
+                                         act_granularity="per_token"))
+    with pytest.raises(ValueError, match="shared/\\s*multi-instance|shared"):
+        quantize_model(cfg, params, batches, pol)
+    art = quantize_model(cfg, params, batches, pol, prequantize=False)
+    assert any(s.startswith("shared") for s in art.smooth_factors)
+
+
+def test_moe_shared_expert_smooth(small_model):
+    """MoE shared expert: eager sites are layer{i}/mlp_up|down but weights
+    live under moe/shared/ (never packed) and the scanned lookup key is
+    moe_shared_*."""
+    cfg = get_config("llama4-scout-17b-a16e", reduced=True)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (1, 8))}]
+    pol = SitePolicy.uniform(QuantConfig(method="smoothquant",
+                                         act_granularity="per_token"))
+    art = quantize_model(cfg, params, batches, pol)
+    assert "layer0/mlp_up" in art.smooth_factors       # shared-expert factor
+    assert "moe_shared_up@smooth" in art.scan_qparams  # scanned lookup key
+    assert "mlp_up@smooth" not in art.scan_qparams
+    toks = jnp.asarray(batches[0]["tokens"])
+    lg = T.forward(cfg, art.params, toks, art.ctx(), scan=False)["logits"]
+    assert bool(jnp.all(jnp.isfinite(lg)))
