@@ -69,6 +69,18 @@ def run(emit=True):
     rows.append((f"kernel/muxq_prequant_site_{m}x{k}x{n}", us,
                  f"gflops={flops / us / 1e3:.2f}"))
 
+    # unified dispatch entry point (what QuantCtx runs at a fused site):
+    # gather/permute + per-token quantize + block-scaled int8 GEMM, oracle impl
+    from repro.core.muxq import QuantConfig
+    from repro.kernels import dispatch
+    buf = dispatch.pack_site_buffer(
+        w, mask, QuantConfig(method="muxq", outlier_mode="static",
+                             backend="fused"))
+    f_disp = jax.jit(lambda a: dispatch.fused_matmul(a, buf, impl="ref"))
+    us = _time(f_disp, x)
+    rows.append((f"kernel/muxq_dispatch_fused_{m}x{k}x{n}", us,
+                 f"gflops={flops / us / 1e3:.2f}"))
+
     # analytic TPU-target speedup of the MUXQ path (uniform int8 on MXU)
     rows.append(("kernel/tpu_int8_speedup_analytic", 0.0,
                  f"x{PEAK_INT8 / PEAK_BF16:.1f}_over_bf16"))
@@ -82,5 +94,57 @@ def run(emit=True):
     return rows
 
 
+def run_engine(emit=True):
+    """Engine-level decode throughput: ServeEngine tokens/sec, fused vs
+    fake vs fp backends on one small dense LM (CPU numbers; the backend
+    RATIO is the tracked signal, not the absolute wall time)."""
+    from repro.configs import get_config
+    from repro.core.muxq import QuantConfig
+    from repro.core.policy import SitePolicy
+    from repro.models import transformer as T
+    from repro.quantize import quantize_model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_config("gpt2-small", reduced=True).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=300)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (2, 32))}
+               for _ in range(2)]
+    base = QuantConfig(method="muxq", outlier_mode="static",
+                       act_granularity="per_token",
+                       weight_granularity="per_channel", real_int8=True,
+                       muxq_form="fused")
+    engines = {
+        "fp": ServeEngine(cfg, params, max_batch=1, s_max=96),
+        "fake": ServeEngine(cfg, quantize_model(
+            cfg, params, batches, SitePolicy.uniform(base)),
+            max_batch=1, s_max=96),
+        "fused": ServeEngine(cfg, quantize_model(
+            cfg, params, batches,
+            SitePolicy.uniform(base.replace(backend="fused"))),
+            max_batch=1, s_max=96),
+    }
+    rows = []
+    n_new = 32
+    prompt = "the model computes"
+    for name, eng in engines.items():
+        # warm up with the SAME prompt: prefill compiles per token count,
+        # so a different length would put XLA compile inside the timed region
+        eng.generate([Request(prompt, max_new_tokens=2)])
+        t0 = time.perf_counter()
+        reqs = [Request(prompt, max_new_tokens=n_new)]
+        eng.generate(reqs)
+        dt = time.perf_counter() - t0
+        n_tok = len(reqs[0].out_tokens)
+        rows.append((f"engine/decode_{name}", dt / n_tok * 1e6,
+                     f"tokens_per_sec={n_tok / dt:.1f}"))
+    if emit:
+        common.emit(rows)
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_engine()

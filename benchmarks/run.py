@@ -1,15 +1,36 @@
 """Benchmark runner: one function per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV (assignment contract)."""
+Prints ``name,us_per_call,derived`` CSV (assignment contract) and writes a
+machine-readable ``results/BENCH_kernels.json`` ({name: us_per_call}) so the
+perf trajectory across PRs can be tracked by CI.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import sys
 import traceback
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parent / "results"
+JSON_OUT = RESULTS / "BENCH_kernels.json"
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="run only these suites (default: all)")
+    ap.add_argument("--json-out", default=str(JSON_OUT),
+                    help="path for the machine-readable {name: us} dump")
+    args = ap.parse_args(argv)
+
     from benchmarks import (exp_factor_sweep, fig1_outliers, fig3_quant_error,
                             kernel_bench, roofline_table, table1_perplexity,
                             table2_weight_bits)
+
+    class _Fn:
+        def __init__(self, fn):
+            self.run = fn
+
     print("name,us_per_call,derived")
     suites = [
         ("table1", table1_perplexity),
@@ -18,15 +39,29 @@ def main() -> None:
         ("fig3", fig3_quant_error),
         ("exp_sweep", exp_factor_sweep),
         ("kernels", kernel_bench),
+        ("engine", _Fn(kernel_bench.run_engine)),
         ("roofline", roofline_table),
     ]
-    failed = []
+    if args.only:
+        unknown = set(args.only) - {n for n, _ in suites}
+        if unknown:
+            raise SystemExit(f"unknown suites: {sorted(unknown)}")
+        suites = [(n, m) for n, m in suites if n in args.only]
+
+    failed, timings = [], {}
     for name, mod in suites:
         try:
-            mod.run(emit=True)
+            for row in mod.run(emit=True) or ():
+                timings[row[0]] = round(float(row[1]), 1)
         except Exception as e:  # keep the suite going; report at the end
             failed.append((name, e))
             traceback.print_exc(file=sys.stderr)
+
+    out = Path(args.json_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(timings, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {out} ({len(timings)} entries)", file=sys.stderr)
+
     if failed:
         print(f"# FAILED suites: {[n for n, _ in failed]}", file=sys.stderr)
         sys.exit(1)

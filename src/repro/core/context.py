@@ -24,6 +24,16 @@ Contexts:
                explicit args when running under ``lax.scan`` (host dict
                lookups don't trace).
 
+Execution backends (``repro.kernels.dispatch``): each resolved config's
+``backend`` routes the site to ``fp`` passthrough, ``fake`` (everything
+below this docstring's original description: quantize-dequantize semantics
+and the jnp real-int8 reference paths) or ``fused`` — the packed
+single-GEMM MUXQ kernel.  Fused sites consume a kernel-ready buffer instead
+of the weight leaf: from the ``fused=`` argument under ``lax.scan``
+(stacked ``{site}@fused`` entries of ``scan_qparams``) or from the ctx's
+``kernel_buffers`` host dict on the eager path.  The backend chosen per
+site is recorded in ``QuantCtx.backend_log`` at trace time.
+
 Smoothing conventions (two distinct vectors ride under one name):
   * ``smooths`` host dict / ``smooth=`` into ``qmatmul``: the *calibrated
     activation abs-max* — SmoothQuant factors are derived live from it and
@@ -47,6 +57,7 @@ from repro.core import quantizers as Q
 from repro.core.muxq import QuantConfig, qmatmul
 from repro.core.outliers import CalibrationStats
 from repro.core.policy import SitePolicy, as_policy
+from repro.kernels import dispatch
 
 _SMOOTH_METHODS = ("smoothquant", "muxq_smooth")
 
@@ -82,10 +93,12 @@ def _prequant_matmul(x, w, cfg: QuantConfig, mask=None):
 class FpCtx:
     quantized = False
 
-    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None,
+                 fused=None):
         return x @ _dense_w(w, x.dtype)
 
-    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None,
+            fused=None):
         """Per-expert matmul: x [e, c, d] @ w [e, d, f] -> [e, c, f]."""
         return jnp.einsum("ecd,edf->ecf", x, _dense_w(w, x.dtype))
 
@@ -97,14 +110,16 @@ class CollectCtx:
     def __init__(self, stats: Optional[CalibrationStats] = None) -> None:
         self.stats = stats or CalibrationStats()
 
-    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None,
+                 fused=None):
         import jax
         if isinstance(x, jax.core.Tracer):  # pragma: no cover - guarded misuse
             raise RuntimeError("CollectCtx must run eagerly (not under jit/scan)")
         self.stats.update(name, x)
         return x @ _dense_w(w, x.dtype)
 
-    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None,
+            fused=None):
         import jax
         if isinstance(x, jax.core.Tracer):  # pragma: no cover - guarded misuse
             raise RuntimeError("CollectCtx must run eagerly (not under jit/scan)")
@@ -118,10 +133,12 @@ class QuantCtx:
     def __init__(self, quant,
                  masks: Optional[Dict[str, np.ndarray]] = None,
                  smooths: Optional[Dict[str, np.ndarray]] = None,
-                 smooth_factors: Optional[Dict[str, np.ndarray]] = None) -> None:
+                 smooth_factors: Optional[Dict[str, np.ndarray]] = None,
+                 kernel_buffers: Optional[Dict[str, dict]] = None) -> None:
         """``quant`` is a QuantConfig (uniform policy), a SitePolicy, or a
         ``repro.quantize.QuantArtifact`` (duck-typed: supplies policy, masks,
-        act-absmax and folded smooth factors in one object)."""
+        act-absmax, folded smooth factors and packed kernel buffers in one
+        object)."""
         if isinstance(quant, (QuantConfig, SitePolicy)):
             self.policy = as_policy(quant)
         else:  # QuantArtifact (duck-typed to avoid a core -> repro.quantize dep)
@@ -130,10 +147,15 @@ class QuantCtx:
             smooths = quant.act_absmax if smooths is None else smooths
             smooth_factors = (quant.smooth_factors if smooth_factors is None
                               else smooth_factors)
+            kernel_buffers = (getattr(quant, "kernel_buffers", None)
+                              if kernel_buffers is None else kernel_buffers)
         self.cfg = self.policy.default          # back-compat accessor
         self.masks = masks or {}
         self.smooths = smooths or {}
         self.smooth_factors = smooth_factors or {}
+        self.kernel_buffers = kernel_buffers or {}
+        # site -> backend chosen, recorded at trace time (tests/inspection)
+        self.backend_log: Dict[str, str] = {}
 
     # -- per-site state resolution (host dicts: eager path only) ------------
 
@@ -157,9 +179,24 @@ class QuantCtx:
         return cfg.replace(
             method="naive" if cfg.method == "smoothquant" else "muxq")
 
-    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+    def _fused_buffer(self, name: str, fused):
+        """The packed kernel buffer for a fused-backend site: the scanned
+        ``fused=`` argument, else the eager host dict."""
+        buf = fused if fused is not None else self.kernel_buffers.get(name)
+        if buf is None:
+            raise RuntimeError(
+                f"site {name!r}: backend 'fused' needs packed kernel buffers "
+                "— build the artifact via repro.quantize.quantize_model"
+                "(..., prequantize=True), or route this site to the 'fake' "
+                "backend")
+        return buf
+
+    def __call__(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None,
+                 fused=None):
         cfg = self.policy.resolve(name)
-        if cfg.method == "fp":
+        backend = dispatch.site_backend(cfg)
+        self.backend_log[name] = backend
+        if backend == "fp":
             return x @ _dense_w(w, x.dtype)
         mask, factor, hint = self._site(name, cfg, mask, smooth)
 
@@ -167,26 +204,33 @@ class QuantCtx:
             if factor is not None:
                 x = (x / factor).astype(x.dtype)
                 cfg = self._smooth_base(cfg)
-                if _is_prequant(w):     # s*W folded at pack time
-                    return _prequant_matmul(x, w, cfg, mask)
-                w = (w * factor[:, None]).astype(w.dtype)
-            elif _is_prequant(w):
+                if backend == "fake" and not _is_prequant(w):
+                    w = (w * factor[:, None]).astype(w.dtype)
+            elif backend == "fused" or _is_prequant(w):
                 raise RuntimeError(
-                    f"site {name!r}: method {cfg.method!r} with pre-quantized "
-                    "weights needs folded smooth factors (build the packed "
-                    "tree via repro.quantize.quantize_model)")
+                    f"site {name!r}: method {cfg.method!r} on the "
+                    f"{backend!r} backend needs folded smooth factors "
+                    "(build the packed tree via "
+                    "repro.quantize.quantize_model)")
             # else: quantize-at-use — qmatmul derives factors from the hint
 
+        if backend == "fused":
+            buf = self._fused_buffer(name, fused)
+            return dispatch.fused_matmul(
+                x, buf, act_bits=cfg.act_bits).astype(x.dtype)
         if _is_prequant(w):
             return _prequant_matmul(x, w, cfg, mask)
         return qmatmul(x, w.astype(x.dtype), cfg, mask=mask, smooth=hint)
 
-    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None):
+    def emm(self, name: str, x: jnp.ndarray, w, mask=None, smooth=None,
+            fused=None):
         """Quantized per-expert matmul: vmap the 2-D policy over the expert
         axis (per-expert weight scales, shared outlier mask — DESIGN.md §5)."""
         import jax
         cfg = self.policy.resolve(name)
-        if cfg.method == "fp":
+        backend = dispatch.site_backend(cfg)
+        self.backend_log[name] = backend
+        if backend == "fp":
             return jnp.einsum("ecd,edf->ecf", x, _dense_w(w, x.dtype))
         mask, factor, hint = self._site(name, cfg, mask, smooth)
 
@@ -194,14 +238,19 @@ class QuantCtx:
             if factor is not None:
                 x = (x / factor).astype(x.dtype)
                 cfg = self._smooth_base(cfg)
-                if not _is_prequant(w):
+                if backend == "fake" and not _is_prequant(w):
                     w = (w * factor[None, :, None]).astype(w.dtype)
-            elif _is_prequant(w):
+            elif backend == "fused" or _is_prequant(w):
                 raise RuntimeError(
-                    f"site {name!r}: method {cfg.method!r} with pre-quantized "
-                    "weights needs folded smooth factors (build the packed "
-                    "tree via repro.quantize.quantize_model)")
+                    f"site {name!r}: method {cfg.method!r} on the "
+                    f"{backend!r} backend needs folded smooth factors "
+                    "(build the packed tree via "
+                    "repro.quantize.quantize_model)")
 
+        if backend == "fused":
+            buf = self._fused_buffer(name, fused)
+            return dispatch.fused_emm(
+                x, buf, act_bits=cfg.act_bits).astype(x.dtype)
         if _is_prequant(w):
             fn = lambda xe, qe, se: _prequant_matmul(xe, {"q": qe, "s": se},
                                                      cfg, mask)

@@ -40,8 +40,16 @@ Method = Literal["fp", "naive", "muxq", "llm_int8", "smoothquant", "muxq_smooth"
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    """Quantization policy for every matmul site (paper Table 1 grid)."""
+    """Quantization policy for every matmul site (paper Table 1 grid).
+
+    ``method`` says what math to apply; ``backend`` says how to execute it
+    (``repro.kernels.dispatch``): ``fake`` = quantize-dequantize semantics
+    (the paper's evaluation protocol and the jnp real-int8 paths), ``fused``
+    = the packed single-GEMM MUXQ kernel path (implies per-token activation
+    quantization), ``fp`` = passthrough regardless of method.
+    """
     method: Method = "muxq"
+    backend: Literal["fake", "fused", "fp"] = "fake"
     act_bits: int = 8
     weight_bits: int = 8
     act_granularity: Q.Granularity = "per_tensor"

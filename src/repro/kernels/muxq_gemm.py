@@ -58,14 +58,24 @@ def muxq_gemm(x_int: jnp.ndarray, w_int: jnp.ndarray,
     k2, n = w_int.shape
     assert k == k2 and k % bk == 0 and block_scale.shape == (k // bk,), (
         f"K={k} must tile by bk={bk} with one scale per block")
+    # ragged M (arbitrary token counts, e.g. a 300-token prefill): zero-pad
+    # rows up to a bm multiple and slice the output — padded rows carry
+    # scale 0 so they cost one partial tile, never correctness
     bm = min(bm, m)
+    pad_m = (-m) % bm
+    if pad_m:
+        x_int = jnp.pad(x_int, ((0, pad_m), (0, 0)))
+        sx = jnp.pad(sx, ((0, pad_m), (0, 0)))
+    # N stays un-padded (weights are packed offline at a known width); pick
+    # the largest tile that divides it instead
     bn = min(bn, n)
-    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+    while n % bn:
+        bn -= 1
     nk = k // bk
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, nk=nk),
-        grid=(m // bm, n // bn, nk),
+        grid=((m + pad_m) // bm, n // bn, nk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
             pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
@@ -74,7 +84,8 @@ def muxq_gemm(x_int: jnp.ndarray, w_int: jnp.ndarray,
             pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((m + pad_m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(x_int, w_int, block_scale, sx, sw)
+    return out[:m] if pad_m else out

@@ -6,11 +6,19 @@ mask it (offline) permutes channels so outliers form contiguous K-blocks,
 pre-quantizes the weight, and (online) quantizes activations per-token and
 runs the fused block-scaled INT8 GEMM.  On CPU (tests/this container) the
 kernels run in interpret mode or fall back to the jnp oracle.
+
+The online body construction is DATA-DRIVEN: ``MuxqWeights`` carries a
+``gather_idx`` [K_pad] channel-gather map and an ``in_scale`` [K_pad]
+per-slot multiplier (2^-e on the outlier run, 0 on padding slots, 1
+elsewhere) instead of static slice bounds.  That makes the per-layer packed
+buffers stackable to [L, ...] and traceable through ``lax.scan`` — the
+kernel-dispatch layer (``repro.kernels.dispatch``) relies on this to run
+the fused path inside scanned layer loops.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -28,25 +36,38 @@ def _on_tpu() -> bool:
 
 @dataclasses.dataclass
 class MuxqWeights:
-    """Offline-prepared weights for one linear layer."""
+    """Offline-prepared weights for one linear layer.
+
+    Arrays only (plus ``bk``/``k_orig`` statics derivable from shapes), so a
+    per-layer stack of these fields is a valid ``lax.scan`` xs pytree.
+    """
     w_int: jnp.ndarray          # [K_pad, N] int8 (outlier rows first)
     sw: jnp.ndarray             # [1, N] f32 per-out-channel scales
-    perm: jnp.ndarray           # [K] channel permutation applied to inputs
     block_scale: jnp.ndarray    # [K_pad/bk] int32: 2^exp on outlier blocks
+    gather_idx: jnp.ndarray     # [K_pad] int32 source channel per slot
+    in_scale: jnp.ndarray       # [K_pad] f32: 2^-e outlier run, 0 pads, 1 else
     bk: int
-    k_orig: int                 # pre-padding channel count
-    pad_out: int                # zero channels inserted after the outliers
-    pad_tail: int               # zero channels appended at the end
+    k_orig: Optional[int]       # pre-padding channel count (None when
+                                # rebuilt from a buffer dict: not derivable
+                                # from shapes, and unused at runtime)
+    perm: Optional[jnp.ndarray] = None  # [K] offline permutation (info only)
+    pad_out: int = 0            # zero channels inserted after the outliers
+    pad_tail: int = 0           # zero channels appended at the end
     n_out: int = 0              # outlier channel count (static: jit-safe)
 
 
 def prepare_weights(w: jnp.ndarray, outlier_mask: np.ndarray, exp_factor: int,
-                    bk: int = 512, weight_bits: int = 8) -> MuxqWeights:
+                    bk: int = 512, weight_bits: int = 8,
+                    k_pad_to: Optional[int] = None) -> MuxqWeights:
     """Offline step: permute outlier channels to the front and ZERO-PAD the
     outlier run up to a bk multiple.  Padding (not weight-side 2^-e
     compensation) keeps normal channels out of the x2^e blocks — scaling a
     normal channel down/up would amplify its quantization error 2^e-fold.
-    Cost: <= bk-1 zero channels (~one extra K tile)."""
+    Cost: <= bk-1 zero channels (~one extra K tile).
+
+    ``k_pad_to`` forces a larger padded width (whole extra zero K-blocks at
+    the tail) so buffers packed per layer can stack to one [L, ...] tree.
+    """
     k = w.shape[0]
     bk = min(bk, k)
     mask = np.asarray(outlier_mask, bool)
@@ -57,6 +78,10 @@ def prepare_weights(w: jnp.ndarray, outlier_mask: np.ndarray, exp_factor: int,
     pad_out = (-n_out) % bk if n_out else 0
     n_blocks_out = (n_out + pad_out) // bk
     pad_tail = (-(k + pad_out)) % bk
+    if k_pad_to is not None:
+        extra = k_pad_to - (k + pad_out + pad_tail)
+        assert extra >= 0 and extra % bk == 0, (k_pad_to, k, pad_out, pad_tail)
+        pad_tail += extra
 
     w_perm = np.asarray(w, np.float32)[perm]
     w_padded = np.concatenate(
@@ -67,39 +92,42 @@ def prepare_weights(w: jnp.ndarray, outlier_mask: np.ndarray, exp_factor: int,
     block_scale = np.ones(k_pad // bk, np.int32)
     block_scale[:n_blocks_out] = 2 ** exp_factor
 
+    # data-driven body construction: body = x[gather_idx] * in_scale
+    gather_idx = np.zeros(k_pad, np.int32)
+    in_scale = np.zeros(k_pad, np.float32)
+    gather_idx[:n_out] = idx_out
+    in_scale[:n_out] = 2.0 ** (-exp_factor)
+    gather_idx[n_out + pad_out: n_out + pad_out + len(idx_norm)] = idx_norm
+    in_scale[n_out + pad_out: n_out + pad_out + len(idx_norm)] = 1.0
+
     w_int, sw = Q.quantize(jnp.asarray(w_padded), weight_bits, "per_channel")
     return MuxqWeights(w_int=w_int, sw=sw.reshape(1, -1),
-                       perm=jnp.asarray(perm), block_scale=jnp.asarray(block_scale),
-                       bk=bk, k_orig=k, pad_out=pad_out, pad_tail=pad_tail,
-                       n_out=n_out)
+                       block_scale=jnp.asarray(block_scale),
+                       gather_idx=jnp.asarray(gather_idx),
+                       in_scale=jnp.asarray(in_scale),
+                       bk=bk, k_orig=k, perm=jnp.asarray(perm),
+                       pad_out=pad_out, pad_tail=pad_tail, n_out=n_out)
 
 
 
 
-def _permute_pad_shift(x2: jnp.ndarray, mw: MuxqWeights, exp_factor: int) -> jnp.ndarray:
-    """Online Body construction: permute channels (outliers first), insert
-    the zero padding, shift the outlier run down by 2^e (paper Eq. 4)."""
-    # static ints (never derive from closed-over arrays: jit would trace them)
-    n_out = mw.n_out
-    covered = n_out + mw.pad_out
-    xp = x2[:, mw.perm]
-    parts = [xp[:, :n_out]]
-    if mw.pad_out:
-        parts.append(jnp.zeros((x2.shape[0], mw.pad_out), x2.dtype))
-    parts.append(xp[:, n_out:])
-    if mw.pad_tail:
-        parts.append(jnp.zeros((x2.shape[0], mw.pad_tail), x2.dtype))
-    xp = jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
-    scale_vec = jnp.where(jnp.arange(xp.shape[1]) < covered,
-                          2.0 ** (-exp_factor), 1.0)
-    return (xp * scale_vec).astype(x2.dtype)
+def _permute_pad_shift(x2: jnp.ndarray, mw: MuxqWeights,
+                       exp_factor: Optional[int] = None) -> jnp.ndarray:
+    """Online body construction: gather channels into packed order (outliers
+    first, zero padding in place) and shift the outlier run down by 2^e
+    (paper Eq. 4).  Pure data movement on traced arrays — ``exp_factor`` is
+    already baked into ``mw.in_scale`` and the argument is kept only for
+    call-site compatibility."""
+    return (x2[:, mw.gather_idx] * mw.in_scale).astype(x2.dtype)
 
 
-def muxq_linear(x: jnp.ndarray, mw: MuxqWeights, exp_factor: int,
+def muxq_linear(x: jnp.ndarray, mw: MuxqWeights,
+                exp_factor: Optional[int] = None,
                 act_bits: int = 8, interpret: Optional[bool] = None,
                 out_dtype=None) -> jnp.ndarray:
     """Online path: permute -> scale outlier block down -> per-token int8
-    quantize -> fused block-scaled GEMM."""
+    quantize -> fused block-scaled GEMM.  Arbitrary (ragged) token counts
+    are handled inside the kernel wrappers."""
     if interpret is None:
         interpret = not _on_tpu()
     out_dtype = out_dtype or x.dtype
@@ -108,20 +136,16 @@ def muxq_linear(x: jnp.ndarray, mw: MuxqWeights, exp_factor: int,
     body = _permute_pad_shift(x.reshape(-1, k), mw, exp_factor)
 
     m = body.shape[0]
-    pad_m = (-m) % 8
-    if pad_m:
-        body = jnp.pad(body, ((0, pad_m), (0, 0)))
-    x_int, sx = rowwise_quantize(body, bits=act_bits, bm=min(128, body.shape[0]),
+    x_int, sx = rowwise_quantize(body, bits=act_bits, bm=min(128, m),
                                  interpret=interpret)
     y = muxq_gemm(x_int, mw.w_int, mw.block_scale, sx, mw.sw,
-                  bm=min(256, body.shape[0]), bk=mw.bk,
+                  bm=min(256, m), bk=mw.bk,
                   out_dtype=jnp.float32, interpret=interpret)
-    if pad_m:
-        y = y[:m]
     return y.reshape(*lead, -1).astype(out_dtype)
 
 
-def muxq_linear_ref(x: jnp.ndarray, mw: MuxqWeights, exp_factor: int,
+def muxq_linear_ref(x: jnp.ndarray, mw: MuxqWeights,
+                    exp_factor: Optional[int] = None,
                     act_bits: int = 8, out_dtype=None) -> jnp.ndarray:
     """Same math via the jnp oracle (for tests / CPU serving)."""
     out_dtype = out_dtype or x.dtype

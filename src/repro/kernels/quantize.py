@@ -29,17 +29,21 @@ def _kernel(x_ref, q_ref, s_ref, *, bits: int):
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
 def rowwise_quantize(x: jnp.ndarray, *, bits: int = 8, bm: int = 128,
                      interpret: bool = False):
-    """x [M, K] -> (int8 [M, K], scales f32 [M, 1])."""
+    """x [M, K] -> (int8 [M, K], scales f32 [M, 1]).  Ragged M is zero-padded
+    to a bm multiple internally and sliced back off the outputs."""
     m, k = x.shape
     bm = min(bm, m)
-    assert m % bm == 0, (m, bm)
-    return pl.pallas_call(
+    pad_m = (-m) % bm
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    q, s = pl.pallas_call(
         functools.partial(_kernel, bits=bits),
-        grid=(m // bm,),
+        grid=((m + pad_m) // bm,),
         in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
         out_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0)),
                    pl.BlockSpec((bm, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((m, k), jnp.int8),
-                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((m + pad_m, k), jnp.int8),
+                   jax.ShapeDtypeStruct((m + pad_m, 1), jnp.float32)],
         interpret=interpret,
     )(x)
+    return (q[:m], s[:m]) if pad_m else (q, s)

@@ -21,6 +21,9 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="gpt2-small")
     ap.add_argument("--quant", default="muxq",
                     choices=["fp", "naive", "muxq", "llm_int8", "smoothquant"])
+    ap.add_argument("--backend", default="fake", choices=["fake", "fused"],
+                    help="execution backend for quantized sites: 'fused' "
+                         "runs the packed single-GEMM MUXQ kernel path")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--save-artifact", default=None,
                     help="directory to save the QuantArtifact bundle to")
@@ -34,9 +37,14 @@ def main(argv=None) -> int:
     if args.quant == "fp":
         engine = ServeEngine(cfg, params, max_batch=2, s_max=128)
     else:
-        policy = SitePolicy.uniform(QuantConfig(
-            method=args.quant, act_granularity="per_token",
-            outlier_mode="static"))
+        if args.backend == "fused" and args.quant == "llm_int8":
+            raise SystemExit("llm_int8 has no fused kernel realization")
+        spec = QuantConfig(method=args.quant, act_granularity="per_token",
+                           outlier_mode="static")
+        if args.backend == "fused":    # the packed kernel is per-channel
+            spec = spec.replace(backend="fused",
+                                weight_granularity="per_channel")
+        policy = SitePolicy.uniform(spec)
         pipe = TokenPipeline(PipelineConfig(seq_len=64, global_batch=2))
         artifact = quantize_model(cfg, params,
                                   [next(pipe) for _ in range(2)], policy)

@@ -122,3 +122,8 @@ def make_serve_step(cfg: ModelConfig, quant=None, qparams=None,
 MUXQ_SERVE = QuantConfig(method="muxq", real_int8=True, muxq_form="fused",
                          outlier_mode="static", act_granularity="per_token",
                          weight_granularity="per_channel", exp_factor=2)
+
+# same math, executed through the packed single-GEMM kernel path
+# (repro.kernels.dispatch): Pallas muxq_linear on TPU, jnp int8 oracle /
+# interpret mode on CPU.  Needs an artifact built with prequantize=True.
+MUXQ_FUSED_SERVE = MUXQ_SERVE.replace(backend="fused")

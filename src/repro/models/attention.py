@@ -99,7 +99,7 @@ def attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     sq = sq or {}
     b, s, d = x.shape
     qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
-              smooth=sq.get("attn_qkv@smooth"))
+              smooth=sq.get("attn_qkv@smooth"), fused=sq.get("attn_qkv@fused"))
     if "bqkv" in p:
         qkv = qkv + p["bqkv"].astype(x.dtype)
     q, k, v = _split_qkv(cfg, qkv)
@@ -116,7 +116,7 @@ def attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     o = sdpa(cfg, q, k, v, bias)
     o = o.reshape(b, s, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
-              smooth=sq.get("attn_out@smooth"))
+              smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
     return out, cache
 
 
@@ -128,7 +128,7 @@ def attention_decode(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     b, one, d = x.shape
     pos = cache["pos"]
     qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
-              smooth=sq.get("attn_qkv@smooth"))
+              smooth=sq.get("attn_qkv@smooth"), fused=sq.get("attn_qkv@fused"))
     if "bqkv" in p:
         qkv = qkv + p["bqkv"].astype(x.dtype)
     q, k, v = _split_qkv(cfg, qkv)
@@ -178,7 +178,7 @@ def attention_decode(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     o = sdpa(cfg, q, kk, vv, bias)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
-              smooth=sq.get("attn_out@smooth"))
+              smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
     return out, new_cache
 
 
@@ -190,16 +190,17 @@ def cross_attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     b, s, d = x.shape
     h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     q = ctx("cross_q", x, p["wq"], mask=sq.get("cross_q"),
-            smooth=sq.get("cross_q@smooth"))
+            smooth=sq.get("cross_q@smooth"), fused=sq.get("cross_q@fused"))
     kvm = ctx("cross_kv", memory, p["wkv"], mask=sq.get("cross_kv"),
-              smooth=sq.get("cross_kv@smooth"))
+              smooth=sq.get("cross_kv@smooth"), fused=sq.get("cross_kv@fused"))
     sm = memory.shape[1]
     q = q.reshape(b, s, h, dh)
     k = kvm[..., : kv * dh].reshape(b, sm, kv, dh)
     v = kvm[..., kv * dh:].reshape(b, sm, kv, dh)
     o = sdpa(cfg, q, k, v, None).reshape(b, s, h * dh)
     return ctx("cross_out", o, p["wo"], mask=sq.get("cross_out"),
-               smooth=sq.get("cross_out@smooth"))
+               smooth=sq.get("cross_out@smooth"),
+               fused=sq.get("cross_out@fused"))
 
 
 def n_attn_layers(cfg: ModelConfig) -> int:

@@ -22,7 +22,7 @@ def mlp(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         sq: Optional[Dict] = None) -> jnp.ndarray:
     sq = sq or {}
     h = ctx("mlp_up", x, p["wi"], mask=sq.get("mlp_up"),
-            smooth=sq.get("mlp_up@smooth"))
+            smooth=sq.get("mlp_up@smooth"), fused=sq.get("mlp_up@fused"))
     if cfg.mlp_type == "swiglu":
         gate, up = jnp.split(h, 2, axis=-1)
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
@@ -31,7 +31,7 @@ def mlp(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
             h = h + p["bi"].astype(x.dtype)
         h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
     out = ctx("mlp_down", h, p["wo"], mask=sq.get("mlp_down"),
-              smooth=sq.get("mlp_down@smooth"))
+              smooth=sq.get("mlp_down@smooth"), fused=sq.get("mlp_down@fused"))
     if "bo" in p:
         out = out + p["bo"].astype(x.dtype)
     return out

@@ -114,20 +114,24 @@ def moe(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     # ---- expert FFN (quantized), batched over groups ---------------------
     if g == 1:
         h = ctx.emm("moe_up", buf[0], p["wi"], mask=sq.get("moe_up"),
-                    smooth=sq.get("moe_up@smooth"))
+                    smooth=sq.get("moe_up@smooth"),
+                    fused=sq.get("moe_up@fused"))
         gate, up = jnp.split(h, 2, axis=-1)
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
         out_e = ctx.emm("moe_down", h, p["wo"], mask=sq.get("moe_down"),
-                        smooth=sq.get("moe_down@smooth"))[None]
+                        smooth=sq.get("moe_down@smooth"),
+                        fused=sq.get("moe_down@fused"))[None]
     else:
         # fold groups into the expert "token" dim: [e, g*cap, d]
         bswap = buf.swapaxes(0, 1).reshape(e, g * cap, d)
         h = ctx.emm("moe_up", bswap, p["wi"], mask=sq.get("moe_up"),
-                    smooth=sq.get("moe_up@smooth"))
+                    smooth=sq.get("moe_up@smooth"),
+                    fused=sq.get("moe_up@fused"))
         gate, up = jnp.split(h, 2, axis=-1)
         h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
         out_sw = ctx.emm("moe_down", h, p["wo"], mask=sq.get("moe_down"),
-                         smooth=sq.get("moe_down@smooth"))
+                         smooth=sq.get("moe_down@smooth"),
+                         fused=sq.get("moe_down@fused"))
         out_e = out_sw.reshape(e, g, cap, d).swapaxes(0, 1)        # [g,e,cap,d]
 
     out_flat = out_e.reshape(g, e * cap, d)
@@ -139,8 +143,10 @@ def moe(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         yf = yf + mlp(cfg, p["shared"], ctx, xg.reshape(1, b * s, d), sq={
             "mlp_up": sq.get("moe_shared_up"),
             "mlp_up@smooth": sq.get("moe_shared_up@smooth"),
+            "mlp_up@fused": sq.get("moe_shared_up@fused"),
             "mlp_down": sq.get("moe_shared_down"),
-            "mlp_down@smooth": sq.get("moe_shared_down@smooth")})[0]
+            "mlp_down@smooth": sq.get("moe_shared_down@smooth"),
+            "mlp_down@fused": sq.get("moe_shared_down@fused")})[0]
 
     # ---- Switch aux loss (global over all groups) -------------------------
     top1 = jnp.argmax(probs, axis=-1).reshape(-1)

@@ -124,9 +124,11 @@ def _project(cfg, p_, ctx, x, sq):
     """Run both projections; returns z, xc(raw), bc(raw), dt(raw)."""
     di, n, h, p = _dims(cfg)
     zx = ctx("ssm_in_zx", x, p_["in_zx"], mask=sq.get("ssm_in_zx"),
-             smooth=sq.get("ssm_in_zx@smooth"))
+             smooth=sq.get("ssm_in_zx@smooth"),
+             fused=sq.get("ssm_in_zx@fused"))
     bcdt = ctx("ssm_in_bcdt", x, p_["in_bcdt"], mask=sq.get("ssm_in_bcdt"),
-               smooth=sq.get("ssm_in_bcdt@smooth"))
+               smooth=sq.get("ssm_in_bcdt@smooth"),
+               fused=sq.get("ssm_in_bcdt@fused"))
     z, xc = zx[..., :di], zx[..., di:]
     bc, dt = bcdt[..., : 2 * n], bcdt[..., 2 * n:]
     return z, xc, bc, dt
@@ -163,7 +165,7 @@ def ssm_block(cfg: ModelConfig, p_: dict, ctx, x: jnp.ndarray,
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)      # gate
     y = rmsnorm(y, p_["norm_gain"], cfg.norm_eps)
     out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"),
-              smooth=sq.get("ssm_out@smooth"))
+              smooth=sq.get("ssm_out@smooth"), fused=sq.get("ssm_out@fused"))
 
     new_state = None
     if want_state:
@@ -209,7 +211,7 @@ def ssm_decode(cfg: ModelConfig, p_: dict, ctx, x: jnp.ndarray,
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
     y = rmsnorm(y, p_["norm_gain"], cfg.norm_eps)
     out = ctx("ssm_out", y, p_["out_proj"], mask=sq.get("ssm_out"),
-              smooth=sq.get("ssm_out@smooth"))
+              smooth=sq.get("ssm_out@smooth"), fused=sq.get("ssm_out@fused"))
     return out, {"conv_x": win_x[:, 1:], "conv_bc": win_bc[:, 1:], "ssm": s_new}
 
 

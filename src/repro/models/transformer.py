@@ -147,11 +147,13 @@ class _Named:
         self.ctx, self.prefix = ctx, prefix
         self.quantized = getattr(ctx, "quantized", False)
 
-    def __call__(self, name, x, w, mask=None, smooth=None):
-        return self.ctx(self.prefix + name, x, w, mask=mask, smooth=smooth)
+    def __call__(self, name, x, w, mask=None, smooth=None, fused=None):
+        return self.ctx(self.prefix + name, x, w, mask=mask, smooth=smooth,
+                        fused=fused)
 
-    def emm(self, name, x, w, mask=None, smooth=None):
-        return self.ctx.emm(self.prefix + name, x, w, mask=mask, smooth=smooth)
+    def emm(self, name, x, w, mask=None, smooth=None, fused=None):
+        return self.ctx.emm(self.prefix + name, x, w, mask=mask,
+                            smooth=smooth, fused=fused)
 
 
 # ---------------------------------------------------------------------------
@@ -172,12 +174,13 @@ def _window_flags(cfg: ModelConfig) -> jnp.ndarray:
 
 
 def _sq_for_layer(qparams, i=None):
-    """qparams: {site: [L, ch]} -> per-layer {site: [ch]} (sliced or scanned)."""
+    """qparams: {site: [L, ch] | {field: [L, ...]}} -> per-layer slice
+    (``{site}@fused`` kernel buffers are dict-valued, hence the tree map)."""
     if qparams is None:
         return {}
     if i is None:
         return qparams  # already sliced by scan
-    return {k: v[i] for k, v in qparams.items()}
+    return jax.tree.map(lambda v: v[i], qparams)
 
 
 def forward(cfg: ModelConfig, params, tokens, ctx=None, *, extra=None,

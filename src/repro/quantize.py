@@ -8,9 +8,13 @@ calibration data, :class:`~repro.core.policy.SitePolicy`) into one saveable
   * calibrated static outlier masks (``{eager site: [ch] bool}``),
   * calibrated activation abs-max per site (SmoothQuant raw material),
   * folded smoothing divisors for smooth-method sites,
-  * the offline-packed int8 weight tree (``{"q", "s"}`` leaves), and
+  * the offline-packed int8 weight tree (``{"q", "s"}`` leaves),
+  * kernel-ready packed buffers for fused-backend sites
+    (``repro.kernels.dispatch`` format: permutation gather, zero padding,
+    per-K-block exponent scales, int8 weights), and
   * stacked ``[L, ch]`` qparams for ``lax.scan``-ed layer loops
-    (masks under the bare site name, divisors under ``{site}@smooth``).
+    (masks under the bare site name, divisors under ``{site}@smooth``,
+    stacked kernel buffers under ``{site}@fused``).
 
 Every consumer — ``ServeEngine``, the launch step builders, benchmarks —
 takes the artifact directly; there is no ``(quant, qparams, masks, smooths)``
@@ -33,9 +37,13 @@ from repro.core.muxq import QuantConfig
 from repro.core.outliers import CalibrationStats
 from repro.core.policy import SitePolicy, as_policy
 from repro.core.prequant import prequantize_params
+from repro.kernels import dispatch
 
 _SMOOTH_METHODS = ("smoothquant", "muxq_smooth")
-_FORMAT_VERSION = 1
+# v1: no kernel_buffers group, policy configs without a backend field.
+# v2 (current): + kernel_buffers group, nested (dict-valued) scan_qparams
+# entries flattened with '#'.  Loading accepts 1..=_FORMAT_VERSION.
+_FORMAT_VERSION = 2
 
 # ctx site base name -> weight-leaf path inside one layer's param subtree.
 # "mlp_*" has a fallback: in MoE layers the shared expert reuses mlp() (its
@@ -65,9 +73,10 @@ def split_site(site: str):
     return m.group(1), int(m.group(2)), m.group(3)
 
 
-def _site_weight(params, site: str) -> Optional[jnp.ndarray]:
-    """The 2-D [in_ch, flattened_out] weight consumed at an eager site, or
-    None when the site has no addressable weight leaf (unknown naming)."""
+def _site_leaf(params, site: str) -> Optional[jnp.ndarray]:
+    """This eager site's per-layer weight leaf ([in_ch, out] or, for MoE
+    expert sites, [E, in_ch, out]; contraction axis -2), or None when the
+    site has no addressable weight leaf (unknown naming)."""
     kind, idx, base = split_site(site)
     path = _SITE_WEIGHT_PATH.get(base)
     if path is None:
@@ -91,9 +100,41 @@ def _site_weight(params, site: str) -> Optional[jnp.ndarray]:
         return None
     if root != "shared":
         leaf = leaf[idx]                       # stacked [L, ...] -> this layer
+    return jnp.asarray(leaf)
+
+
+def _site_weight(params, site: str) -> Optional[jnp.ndarray]:
+    """The 2-D [in_ch, flattened_out] weight consumed at an eager site."""
+    leaf = _site_leaf(params, site)
+    if leaf is None:
+        return None
     # contraction axis is -2; flatten everything else into the out dim
-    leaf = jnp.moveaxis(jnp.asarray(leaf), -2, 0)
+    leaf = jnp.moveaxis(leaf, -2, 0)
     return leaf.reshape(leaf.shape[0], -1)
+
+
+def _flatten_nested(group: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """One level of dict nesting -> npz-storable flat keys ('{key}#{field}');
+    array values pass through.  Inverse of :func:`_unflatten_nested`."""
+    flat: Dict[str, np.ndarray] = {}
+    for key, val in group.items():
+        if isinstance(val, dict):
+            for field, arr in val.items():
+                flat[f"{key}#{field}"] = np.asarray(arr)
+        else:
+            flat[key] = np.asarray(val)
+    return flat
+
+
+def _unflatten_nested(flat: Dict[str, np.ndarray]) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for key, val in flat.items():
+        if "#" in key:
+            base, field = key.rsplit("#", 1)
+            out.setdefault(base, {})[field] = val
+        else:
+            out[key] = val
+    return out
 
 
 @dataclasses.dataclass
@@ -102,13 +143,18 @@ class QuantArtifact:
 
     ``params`` is the offline-packed weight tree (int8 ``{"q","s"}`` leaves,
     other leaves untouched) or None for quantize-at-use artifacts.
-    ``scan_qparams`` carries stacked per-layer state for scanned loops.
+    ``kernel_buffers`` holds the fused-backend packed buffers
+    ({eager site: {field: array}} — ``repro.kernels.dispatch`` format).
+    ``scan_qparams`` carries stacked per-layer state for scanned loops
+    (dict-valued ``{site}@fused`` entries stack kernel buffers).
     """
     policy: SitePolicy
     masks: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     act_absmax: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     smooth_factors: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
-    scan_qparams: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    scan_qparams: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    kernel_buffers: Dict[str, Dict[str, np.ndarray]] = dataclasses.field(
+        default_factory=dict)
     params: Any = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
@@ -127,7 +173,8 @@ class QuantArtifact:
             "masks": self.masks,
             "act_absmax": self.act_absmax,
             "smooth_factors": self.smooth_factors,
-            "scan_qparams": self.scan_qparams,
+            "scan_qparams": _flatten_nested(self.scan_qparams),
+            "kernel_buffers": _flatten_nested(self.kernel_buffers),
             "params": ckpt._flatten(self.params) if self.prequantized else {},
         }
         meta = {"format_version": _FORMAT_VERSION,
@@ -140,17 +187,20 @@ class QuantArtifact:
     def load(cls, path: str) -> "QuantArtifact":
         groups, meta = ckpt.load_bundle(
             path, ["masks", "act_absmax", "smooth_factors", "scan_qparams",
-                   "params"])
+                   "kernel_buffers", "params"])
         policy = SitePolicy.from_json(meta.pop("policy"))
         version = meta.pop("format_version", None)
-        if version != _FORMAT_VERSION:
+        # backward-compatible: v1 bundles (no kernel_buffers group, policies
+        # without a backend field) load as all-'fake'-backend artifacts
+        if not isinstance(version, int) or not 1 <= version <= _FORMAT_VERSION:
             raise ValueError(f"unsupported artifact format {version!r}")
         prequantized = meta.pop("prequantized", bool(groups["params"]))
         params = ckpt._nest(groups["params"]) if prequantized else None
         return cls(policy=policy, masks=groups["masks"],
                    act_absmax=groups["act_absmax"],
                    smooth_factors=groups["smooth_factors"],
-                   scan_qparams=groups["scan_qparams"],
+                   scan_qparams=_unflatten_nested(groups["scan_qparams"]),
+                   kernel_buffers=_unflatten_nested(groups["kernel_buffers"]),
                    params=params, meta=meta)
 
 
@@ -176,10 +226,14 @@ def _scan_key(cfg, base: str) -> str:
 
 
 def _stack_qparams(cfg, masks: Dict[str, np.ndarray],
-                   factors: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+                   factors: Dict[str, np.ndarray],
+                   buffers: Optional[Dict[str, dict]] = None
+                   ) -> Dict[str, Any]:
     """{bare site: [L, ch]} stacked state for scanned layer loops, built from
-    eager 'layer{i}/...' entries that cover every decoder layer."""
-    out: Dict[str, np.ndarray] = {}
+    eager 'layer{i}/...' entries that cover every decoder layer.  Kernel
+    buffers stack field-wise under '{site}@fused' (layers whose packed
+    widths differ are first padded to a uniform K_pad with inert blocks)."""
+    out: Dict[str, Any] = {}
     for source, suffix in ((masks, ""), (factors, "@smooth")):
         bases = {split_site(s)[2] for s in source
                  if split_site(s)[0] == "layer"}
@@ -189,7 +243,80 @@ def _stack_qparams(cfg, masks: Dict[str, np.ndarray],
                 continue                # partial coverage: eager path only
             out[_scan_key(cfg, base) + suffix] = np.stack(
                 [np.asarray(v) for v in vals])
+    buffers = buffers or {}
+    bases = {split_site(s)[2] for s in buffers if split_site(s)[0] == "layer"}
+    for base in sorted(bases):
+        vals = [buffers.get(f"layer{i}/{base}") for i in range(cfg.n_layers)]
+        if any(v is None for v in vals):
+            continue                    # partial coverage: eager path only
+        k_pad = max(dispatch.buffer_k_pad(v) for v in vals)
+        vals = [dispatch.pad_buffer_to(v, k_pad) for v in vals]
+        out[_scan_key(cfg, base) + "@fused"] = {
+            f: np.stack([v[f] for v in vals]) for f in dispatch.BUFFER_FIELDS}
     return out
+
+
+def _fused_sites(cfg, params, policy: SitePolicy):
+    """Yield (eager site, resolved cfg) for every addressable weight leaf
+    whose policy resolves to the fused backend.  Enumerated from the param
+    tree (not calibration stats) so maskless fused policies — e.g. uniform
+    'naive' int8 — pack without a calibration pass.  The hybrid family's
+    shared block packs one buffer per execution instance (``shared{i}/``
+    sites share the weight but carry per-instance masks)."""
+    k_every = getattr(cfg, "shared_attn_every", 0) or 0
+    stacks = (("layer", cfg.n_layers),
+              ("enc", getattr(cfg, "n_enc_layers", 0) or 0),
+              ("shared", sum(1 for i in range(cfg.n_layers)
+                             if i % k_every == k_every - 1) if k_every else 0))
+    for kind, n in stacks:
+        if not n:
+            continue
+        for base in _SITE_WEIGHT_PATH:
+            if _site_leaf(params, f"{kind}0/{base}") is None:
+                continue
+            for i in range(n):
+                site = f"{kind}{i}/{base}"
+                scfg = policy.resolve(site)
+                if scfg.method != "fp" and dispatch.site_backend(scfg) == "fused":
+                    yield site, scfg
+
+
+def _pack_kernel_buffers(cfg, params, policy: SitePolicy,
+                         masks: Dict[str, np.ndarray],
+                         factors: Dict[str, np.ndarray]
+                         ) -> Dict[str, Dict[str, np.ndarray]]:
+    """Kernel-ready packed buffer per fused-backend site (dispatch format).
+
+    Smooth-method sites fold their per-channel divisor into the weight
+    (``Q(s*W)``) before packing, mirroring ``prequantize_params``; the
+    runtime applies ``X/s``.  muxq-family sites require a calibrated static
+    mask — packing bakes the channel permutation offline.
+
+    Fused sites are deliberately ALSO packed into the ``{"q","s"}`` weight
+    tree (both copies are int8, so the bundle carries ~2 bytes/weight for
+    them): the fused path never reads the tree leaves, but the same
+    artifact then still serves with the backend overridden to ``fake``
+    (calibration-parity runs, backends without the kernel).  Dropping the
+    dead copy per deployment target is a ROADMAP item.
+    """
+    buffers: Dict[str, Dict[str, np.ndarray]] = {}
+    for site, scfg in _fused_sites(cfg, params, policy):
+        leaf = _site_leaf(params, site)
+        mask = masks.get(site)
+        if scfg.method in ("muxq", "muxq_smooth") and mask is None:
+            raise ValueError(
+                f"site {site!r}: fused {scfg.method!r} needs a calibrated "
+                "static outlier mask — pass calibration data (the channel "
+                "permutation is baked at pack time)")
+        if scfg.method in _SMOOTH_METHODS:
+            factor = factors.get(site)
+            if factor is None:
+                raise ValueError(
+                    f"site {site!r}: fused {scfg.method!r} needs folded "
+                    "smooth factors — pass calibration data")
+            leaf = (leaf * jnp.asarray(factor)[..., :, None]).astype(leaf.dtype)
+        buffers[site] = dispatch.pack_site_buffer(leaf, mask, scfg)
+    return buffers
 
 
 def quantize_model(cfg, params,
@@ -238,14 +365,17 @@ def quantize_model(cfg, params,
                                      scfg.smooth_alpha), np.float32)
 
     packed = None
+    buffers: Dict[str, Dict[str, np.ndarray]] = {}
     if prequantize:
         packed = prequantize_params(cfg, params, policy=policy,
                                     smooth_factors=factors)
+        buffers = _pack_kernel_buffers(cfg, params, policy, masks, factors)
 
     return QuantArtifact(
         policy=policy, masks=masks, act_absmax=absmax, smooth_factors=factors,
-        scan_qparams=_stack_qparams(cfg, masks, factors), params=packed,
-        meta={"n_sites": len(absmax)})
+        scan_qparams=_stack_qparams(cfg, masks, factors, buffers),
+        kernel_buffers=buffers, params=packed,
+        meta={"n_sites": len(absmax), "n_fused_sites": len(buffers)})
 
 
 def save_artifact(artifact: QuantArtifact, path: str) -> str:

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.context import as_ctx
+from repro.core.context import QuantCtx, as_ctx
 from repro.data import tokenizer as tok
 from repro.models import transformer as T
 from repro.models.attention import init_cache
@@ -36,9 +36,14 @@ class ServeEngine:
 
     Quantized serving takes ONE object: ``ServeEngine(cfg, artifact)`` where
     ``artifact`` is a prequantized :class:`repro.quantize.QuantArtifact`
-    (packed int8 weights + policy + calibrated state), or
-    ``ServeEngine(cfg, params, quant=spec)`` with ``spec`` any of
-    QuantConfig / SitePolicy / QuantArtifact for quantize-at-use.
+    (packed int8 weights + policy + calibrated state + fused kernel
+    buffers), or ``ServeEngine(cfg, params, quant=spec)`` with ``spec`` any
+    of QuantConfig / SitePolicy / QuantArtifact for quantize-at-use.
+
+    Fused-backend sites (``QuantConfig.backend == 'fused'``) execute the
+    packed single-GEMM MUXQ kernel path in prefill and decode — the stacked
+    ``{site}@fused`` buffers ride the ``lax.scan`` layer loop, so the
+    traced step never touches (or dequantizes) those sites' weight leaves.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
@@ -58,6 +63,26 @@ class ServeEngine:
         self.ctx, qparams = as_ctx(quant)
         self.qparams = qparams
         self.greedy = greedy
+        # fail at construction, not deep inside a traced layer loop: a policy
+        # that routes THIS model's sites to the fused backend needs the
+        # packed kernel buffers an artifact built with prequantize=True
+        # carries (rules whose patterns match no site here stay inert)
+        if isinstance(self.ctx, QuantCtx):
+            bases = ["attn_qkv", "attn_out", "mlp_up", "mlp_down"]
+            if cfg.family == "moe":
+                bases += ["moe_up", "moe_down"]
+            names = bases + [f"layer{i}/{b}" for i in range(cfg.n_layers)
+                             for b in bases]
+            wants_fused = any(
+                c.method != "fp" and getattr(c, "backend", "fake") == "fused"
+                for c in map(self.ctx.policy.resolve, names))
+            has_buffers = bool(self.ctx.kernel_buffers) or any(
+                k.endswith("@fused") for k in (qparams or {}))
+            if wants_fused and not has_buffers:
+                raise ValueError(
+                    "policy routes sites to the 'fused' backend but no "
+                    "packed kernel buffers are available — build the "
+                    "artifact via quantize_model(..., prequantize=True)")
 
         def decode(params, tokens, cache):
             logits, cache = T.decode_step(cfg, params, tokens, cache,
