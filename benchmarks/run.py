@@ -24,8 +24,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (exp_factor_sweep, fig1_outliers, fig3_quant_error,
-                            kernel_bench, roofline_table, table1_perplexity,
-                            table2_weight_bits)
+                            kernel_bench, roofline_table, serve_bench,
+                            table1_perplexity, table2_weight_bits)
 
     class _Fn:
         def __init__(self, fn):
@@ -40,6 +40,7 @@ def main(argv=None) -> None:
         ("exp_sweep", exp_factor_sweep),
         ("kernels", kernel_bench),
         ("engine", _Fn(kernel_bench.run_engine)),
+        ("serve", serve_bench),     # smoke grid; full sweep: -m benchmarks.serve_bench
         ("roofline", roofline_table),
     ]
     if args.only:

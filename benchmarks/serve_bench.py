@@ -1,0 +1,168 @@
+"""Serving load generator: continuous-batching engine under Poisson traffic.
+
+Drives ``ServeEngine`` (paged KV pool + pooled per-slot-position decode)
+with Poisson request arrivals and mixed prompt/output lengths, across
+execution backends (``fused`` packed-kernel / ``fake`` quantize-dequantize /
+``fp``) and page modes (``int8`` pages + per-(pos, head) scales vs ``fp``
+pages), and emits a machine-readable ``results/BENCH_serve.json``
+({case: {tokens_per_sec, ttft_ms_mean, pool occupancy/fragmentation,
+preemptions, ...}}) so serving-throughput trajectory across PRs can be
+tracked by CI next to ``BENCH_kernels.json``.
+
+CLI:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import string
+from pathlib import Path
+
+import numpy as np
+
+RESULTS = Path(__file__).resolve().parent / "results"
+JSON_OUT = RESULTS / "BENCH_serve.json"
+
+BACKENDS = ("fused", "fake", "fp")
+KV_MODES = ("int8", "fp")
+
+
+def _model(smoke: bool):
+    import jax
+    from repro.configs import get_config
+    from repro.models import transformer as T
+
+    cfg = get_config("gpt2-small", reduced=True).replace(
+        n_layers=2 if smoke else 4, d_model=64 if smoke else 128,
+        n_heads=4, n_kv_heads=4, d_ff=256 if smoke else 512, vocab_size=300)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine(cfg, params, backend: str, kv_mode: str, *, max_batch: int,
+            s_max: int, page_size: int):
+    from repro.core.muxq import QuantConfig
+    from repro.core.policy import SitePolicy
+    from repro.quantize import quantize_model
+    from repro.serve.engine import ServeEngine
+
+    kw = dict(max_batch=max_batch, s_max=s_max, page_size=page_size,
+              kv_mode=kv_mode)
+    if backend == "fp":
+        return ServeEngine(cfg, params, **kw)
+    base = QuantConfig(method="muxq", outlier_mode="static",
+                       act_granularity="per_token",
+                       weight_granularity="per_channel", real_int8=True,
+                       muxq_form="fused")
+    if backend == "fused":
+        base = base.replace(backend="fused")
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (2, 32))}
+               for _ in range(2)]
+    art = quantize_model(cfg, params, batches, SitePolicy.uniform(base))
+    return ServeEngine(cfg, art, **kw)
+
+
+def _workload(seed: int, n_requests: int, rate: float,
+              prompt_lens=(4, 24), out_lens=(4, 24)):
+    """Poisson arrivals (decode-step clock) + mixed prompt/output lengths."""
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(seed)
+    letters = np.asarray(list(string.ascii_lowercase + " "))
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)).astype(int)
+    reqs = []
+    for _ in range(n_requests):
+        # byte tokenizer: an n-char prompt is n tokens (+BOS)
+        n = int(rng.integers(prompt_lens[0], prompt_lens[1] + 1))
+        prompt = "".join(rng.choice(letters, n))
+        reqs.append(Request(prompt, max_new_tokens=int(
+            rng.integers(out_lens[0], out_lens[1] + 1))))
+    return reqs, [int(a) for a in arrivals]
+
+
+def run_case(backend: str, kv_mode: str, *, smoke: bool = True,
+             n_requests: int = 8, rate: float = 0.5, max_batch: int = 4,
+             s_max: int = 64, page_size: int = 8, seed: int = 0) -> dict:
+    cfg, params = _model(smoke)
+    eng = _engine(cfg, params, backend, kv_mode,
+                  max_batch=max_batch, s_max=s_max, page_size=page_size)
+    # warm up compiles (prefill traces per prompt length) outside the
+    # timed run, with the same length distribution
+    warm, warm_arr = _workload(seed + 1, max(2, n_requests // 4), rate)
+    eng.generate(warm, warm_arr)
+    reqs, arrivals = _workload(seed, n_requests, rate)
+    eng.generate(reqs, arrivals)
+    assert all(r.done for r in reqs)
+    rep = eng.metrics.report()
+    rep["decode_traces"] = eng.decode_traces
+    return rep
+
+
+def run(emit: bool = True, smoke: bool = True, **kw):
+    """benchmarks.run suite hook: (name, us_per_decoded_token, derived)."""
+    from benchmarks import common
+
+    rows = []
+    for backend in BACKENDS:
+        for kv_mode in KV_MODES:
+            rep = run_case(backend, kv_mode, smoke=smoke, **kw)
+            tps = rep["tokens_per_sec"]
+            us = 1e6 / tps if tps else 0.0
+            rows.append((f"serve/decode_{backend}_{kv_mode}", us,
+                         f"tokens_per_sec={tps:.1f}"
+                         f"_occ={rep['pool_occupancy_mean']:.2f}"
+                         f"_frag={rep['fragmentation_mean']:.2f}"))
+    if emit:
+        common.emit(rows)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: 2-layer model, 8 requests/case")
+    ap.add_argument("--backends", nargs="*", default=list(BACKENDS),
+                    choices=list(BACKENDS))
+    ap.add_argument("--kv-modes", nargs="*", default=list(KV_MODES),
+                    choices=list(KV_MODES))
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="Poisson arrival rate (requests per decode step)")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--s-max", type=int, default=None)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=str(JSON_OUT))
+    args = ap.parse_args(argv)
+
+    n_requests = args.n_requests or (8 if args.smoke else 24)
+    s_max = args.s_max or (64 if args.smoke else 128)
+    print("name,us_per_call,derived")
+    from benchmarks import common
+    results = {}
+    for backend in args.backends:
+        for kv_mode in args.kv_modes:
+            rep = run_case(backend, kv_mode, smoke=args.smoke,
+                           n_requests=n_requests, rate=args.rate,
+                           max_batch=args.max_batch, s_max=s_max,
+                           page_size=args.page_size, seed=args.seed)
+            results[f"serve/{backend}_{kv_mode}"] = rep
+            tps = rep["tokens_per_sec"]
+            common.emit([(f"serve/decode_{backend}_{kv_mode}",
+                          1e6 / tps if tps else 0.0,
+                          f"tokens_per_sec={tps:.1f}")])
+    results["_config"] = {
+        "smoke": args.smoke, "n_requests": n_requests, "rate": args.rate,
+        "max_batch": args.max_batch, "s_max": s_max,
+        "page_size": args.page_size, "seed": args.seed,
+    }
+    out = Path(args.json_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {out} ({len(results) - 1} cases)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

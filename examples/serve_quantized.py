@@ -49,6 +49,10 @@ for name, engine_params, quant in [
     eng.generate(reqs)
     dt = time.perf_counter() - t0
     n_tok = sum(len(r.out_tokens) for r in reqs)
-    print(f"[{name}] {n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s")
+    rep = eng.metrics.report()
+    print(f"[{name}] {n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s "
+          f"({rep['decode_steps']} pooled steps, batch mean "
+          f"{rep['decode_batch_mean']:.2f}, {eng.pool.mode} KV pages "
+          f"{rep['cache_bytes']} bytes)")
     for r in reqs[:2]:
         print(f"   {r.prompt!r} -> {ServeEngine.text(r)!r}")

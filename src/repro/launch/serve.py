@@ -1,18 +1,20 @@
 """Serving launcher: load (or train a tiny) model, quantize it into a
 MUXQ artifact (calibrate → plan → prequantize → pack), serve a batch of
-prompts through the engine."""
+prompts through the continuous-batching engine and report serving metrics
+(tokens/s, TTFT, page-pool occupancy/fragmentation)."""
 from __future__ import annotations
 
 import argparse
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core.muxq import QuantConfig
 from repro.core.policy import SitePolicy
 from repro.data.pipeline import PipelineConfig, TokenPipeline
 from repro.models import transformer as T
-from repro.quantize import quantize_model
+from repro.quantize import PACK_TARGETS, quantize_model
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -24,6 +26,15 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="fake", choices=["fake", "fused"],
                     help="execution backend for quantized sites: 'fused' "
                          "runs the packed single-GEMM MUXQ kernel path")
+    ap.add_argument("--kv-mode", default="auto", choices=["auto", "int8", "fp"],
+                    help="page-pool mode: int8 pages + per-(pos, head) "
+                         "scales or fp pages; auto (default) = int8 for "
+                         "quantized serving, fp for --quant fp")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV-cache page")
+    ap.add_argument("--pack-target", default="both", choices=list(PACK_TARGETS),
+                    help="which per-weight copy the artifact keeps for "
+                         "fused sites: both | fused | tree")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--save-artifact", default=None,
                     help="directory to save the QuantArtifact bundle to")
@@ -33,12 +44,20 @@ def main(argv=None) -> int:
 
     cfg = get_config(args.arch, reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
+    kv_mode = None if args.kv_mode == "auto" else args.kv_mode
+    engine_kw = dict(max_batch=2, s_max=128, kv_mode=kv_mode,
+                     page_size=args.page_size, cache_dtype=jnp.bfloat16)
 
     if args.quant == "fp":
-        engine = ServeEngine(cfg, params, max_batch=2, s_max=128)
+        engine = ServeEngine(cfg, params, **engine_kw)
     else:
         if args.backend == "fused" and args.quant == "llm_int8":
             raise SystemExit("llm_int8 has no fused kernel realization")
+        if args.backend == "fused" and args.pack_target == "tree":
+            raise SystemExit(
+                "--pack-target tree drops the fused kernel buffers and "
+                "rewrites fused routing to the fake backend — it cannot "
+                "serve --backend fused (use 'both' or 'fused')")
         spec = QuantConfig(method=args.quant, act_granularity="per_token",
                            outlier_mode="static")
         if args.backend == "fused":    # the packed kernel is per-channel
@@ -47,14 +66,24 @@ def main(argv=None) -> int:
         policy = SitePolicy.uniform(spec)
         pipe = TokenPipeline(PipelineConfig(seq_len=64, global_batch=2))
         artifact = quantize_model(cfg, params,
-                                  [next(pipe) for _ in range(2)], policy)
+                                  [next(pipe) for _ in range(2)], policy,
+                                  pack_target=args.pack_target)
         if args.save_artifact:
             print(f"artifact saved to {artifact.save(args.save_artifact)}")
-        engine = ServeEngine(cfg, artifact, max_batch=2, s_max=128)
+        engine = ServeEngine(cfg, artifact, **engine_kw)
     reqs = [Request(p, max_new_tokens=args.max_new) for p in args.prompts]
     engine.generate(reqs)
     for r in reqs:
         print(f"{r.prompt!r} -> {ServeEngine.text(r)!r} ({len(r.out_tokens)} tokens)")
+    rep = engine.metrics.report()
+    print(f"serve: {rep['tokens_per_sec']:.1f} tok/s over "
+          f"{rep['decode_steps']} pooled decode steps "
+          f"(batch mean {rep['decode_batch_mean']:.2f}); "
+          f"ttft mean {rep['ttft_ms_mean']:.0f} ms; "
+          f"pool occupancy mean {rep['pool_occupancy_mean']:.2f} "
+          f"peak {rep['pool_occupancy_peak']:.2f}; "
+          f"fragmentation {rep['fragmentation_mean']:.2f}; "
+          f"kv pages [{engine.pool.mode}] {rep['cache_bytes']} bytes")
     return 0
 
 

@@ -182,6 +182,87 @@ def attention_decode(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     return out, new_cache
 
 
+def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+                           cache: dict, *, window_flag=False,
+                           sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, dict]:
+    """Pool-wide one-token decode against a *paged* KV pool with a per-slot
+    position vector (the continuous-batching step — ``repro.serve``).
+
+    x [b, 1, d].  ``cache`` holds one layer's page pool plus the pool-wide
+    routing state:
+
+      k/v          [n_pages, page_size, kvh, dh]  (int8 pages carry
+      k/v_scale    [n_pages, page_size, kvh, 1]   per-(pos, head) scales)
+      page_table   [b, pages_per_slot] int32 — physical page per logical
+                   page; 0 is the reserved scratch page (inactive slots /
+                   unallocated tail)
+      pos          [b] int32 — per-slot sequence position (may differ per
+                   slot: misaligned sequences still batch into ONE step)
+
+    The new K/V is scattered into page ``page_table[b, pos//ps]`` at offset
+    ``pos % ps``; attention reads the slot's logical key range via a page
+    gather and masks per slot with ``kpos <= pos[b]`` (+ sliding window), so
+    no alignment between slots is ever required."""
+    sq = sq or {}
+    b, one, d = x.shape
+    pos = cache["pos"]                                      # [b]
+    page_table = cache["page_table"]                        # [b, P]
+    ps = cache["k"].shape[1]
+    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
+              smooth=sq.get("attn_qkv@smooth"), fused=sq.get("attn_qkv@fused"))
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"].astype(x.dtype)
+    q, k, v = _split_qkv(cfg, qkv)
+    positions = pos[:, None].astype(jnp.int32)              # [b, 1]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    int8_kv = "k_scale" in cache
+    if int8_kv:
+        from repro.serve.kvcache import quantize_kv
+        qkv_new = quantize_kv(k, v)
+        k_w, v_w = qkv_new["k"], qkv_new["v"]
+        ks_w, vs_w = qkv_new["k_scale"], qkv_new["v_scale"]
+    else:
+        k_w, v_w = k, v
+
+    # scatter the new token's K/V into each slot's current page.  Inactive
+    # slots all route to scratch page 0 (never read back): duplicate indices
+    # there are harmless.
+    page_idx = jnp.take_along_axis(page_table, (pos // ps)[:, None], 1)[:, 0]
+    offset = pos % ps
+    ck = cache["k"].at[page_idx, offset].set(k_w[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[page_idx, offset].set(v_w[:, 0].astype(cache["v"].dtype))
+    if int8_kv:
+        cks = cache["k_scale"].at[page_idx, offset].set(ks_w[:, 0])
+        cvs = cache["v_scale"].at[page_idx, offset].set(vs_w[:, 0])
+
+    # gather each slot's logical key range: [b, P, ps, ...] -> [b, P*ps, ...]
+    def gather(pool):
+        g = pool[page_table]
+        return g.reshape(b, -1, *g.shape[3:])
+
+    kk, vv = gather(ck), gather(cv)
+    if int8_kv:
+        kk = (kk.astype(jnp.float32) * gather(cks)).astype(x.dtype)
+        vv = (vv.astype(jnp.float32) * gather(cvs)).astype(x.dtype)
+    else:
+        kk = kk.astype(x.dtype)
+        vv = vv.astype(x.dtype)
+    kpos = jnp.arange(kk.shape[1])[None, :]                 # [1, P*ps]
+    in_window = kpos > pos[:, None] - cfg.window_size
+    allow = (kpos <= pos[:, None]) & (in_window | ~jnp.asarray(window_flag))
+    bias = jnp.where(allow, 0.0, NEG_INF)[:, None, None, :].astype(jnp.float32)
+    o = sdpa(cfg, q, kk, vv, bias)
+    o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
+    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
+              smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
+    new_cache = {"k": ck, "v": cv}
+    if int8_kv:
+        new_cache.update(k_scale=cks, v_scale=cvs)
+    return out, new_cache
+
+
 def cross_attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
                     memory: jnp.ndarray, sq: Optional[Dict] = None) -> jnp.ndarray:
     """Whisper-style cross attention: queries from decoder x, keys/values

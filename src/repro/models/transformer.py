@@ -531,6 +531,65 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, ctx=None, *,
     return logits, new_cache
 
 
+def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
+                      page_table, pos, ctx=None, *, qparams=None
+                      ) -> Tuple[jnp.ndarray, dict]:
+    """One-token decode for the WHOLE slot pool against a paged KV pool
+    (``repro.serve.pool``), with a per-slot position vector.
+
+    tokens [b, 1]; ``kv`` = {"k"/"v": [L, n_pages, ps, kvh, dh]} (int8 pages
+    add "k_scale"/"v_scale" [L, n_pages, ps, kvh, 1]); ``page_table``
+    [b, pages_per_slot] int32; ``pos`` [b] int32.  Returns
+    (logits [b, 1, V], updated kv dict).  Unlike :func:`decode_step` the
+    position is per slot, so misaligned sequences decode in ONE traced step
+    — the continuous-batching scheduler's invariant.  Dense/MoE only (the
+    families ``ServeEngine`` serves)."""
+    ctx = ctx or FpCtx()
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged decode supports dense/moe, not {cfg.family}")
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+
+    flags = _window_flags(cfg)
+    int8_kv = "k_scale" in kv
+    scale_tree = ({"k_scale": kv["k_scale"], "v_scale": kv["v_scale"]}
+                  if int8_kv else {})
+
+    def body(x, xs):
+        lp, flag, sq, c_k, c_v, c_s = xs
+        c_i = {"k": c_k, "v": c_v, "page_table": page_table, "pos": pos, **c_s}
+        nctx = _Named(ctx, "")
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, c_i = A.attention_decode_paged(cfg, lp["attn"], nctx, h, c_i,
+                                          window_flag=flag, sq=sq)
+        if cfg.sandwich_norm:
+            a = apply_norm(cfg, lp["ln1b"], a)
+        x = x + a
+        h = apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            m, _ = E.moe(cfg, lp["moe"], nctx, h, sq=sq)
+        else:
+            m = M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
+        if cfg.sandwich_norm:
+            m = apply_norm(cfg, lp["ln2b"], m)
+        sc_out = ({"k_scale": c_i["k_scale"], "v_scale": c_i["v_scale"]}
+                  if int8_kv else {})
+        return x + m, (c_i["k"], c_i["v"], sc_out)
+
+    xs = (params["layers"], flags, qparams or {}, kv["k"], kv["v"], scale_tree)
+    x, (ks, vs, scs) = jax.lax.scan(body, x, xs)
+    new_kv = {"k": ks, "v": vs}
+    if int8_kv:
+        new_kv.update(scs)
+
+    x = apply_norm(cfg, params["ln_f"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_kv
+
+
 # ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------

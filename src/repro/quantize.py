@@ -43,7 +43,13 @@ _SMOOTH_METHODS = ("smoothquant", "muxq_smooth")
 # v1: no kernel_buffers group, policy configs without a backend field.
 # v2 (current): + kernel_buffers group, nested (dict-valued) scan_qparams
 # entries flattened with '#'.  Loading accepts 1..=_FORMAT_VERSION.
+# v2 bundles may also carry a "pack_target" meta field ("both" when absent):
+# "fused" bundles store stub {"q","s"} tree leaves for fused sites, "tree"
+# bundles omit kernel_buffers.npz / "@fused" scan entries entirely — both
+# load through the normal missing-group path.
 _FORMAT_VERSION = 2
+
+PACK_TARGETS = ("both", "fused", "tree")
 
 # ctx site base name -> weight-leaf path inside one layer's param subtree.
 # "mlp_*" has a fallback: in MoE layers the shared expert reuses mlp() (its
@@ -168,19 +174,24 @@ class QuantArtifact:
 
     # -- persistence (atomic bundle dir via repro.checkpoint.ckpt) -----------
 
-    def save(self, path: str) -> str:
+    def save(self, path: str, pack_target: str = "both") -> str:
+        """Persist the bundle.  ``pack_target`` ("both" | "fused" | "tree")
+        drops the duplicate per-weight copy the deployment never reads —
+        see :func:`apply_pack_target`; the saved bundle records the choice
+        in ``meta.json`` and loads through the normal missing-group path."""
+        art = apply_pack_target(self, pack_target)
         groups = {
-            "masks": self.masks,
-            "act_absmax": self.act_absmax,
-            "smooth_factors": self.smooth_factors,
-            "scan_qparams": _flatten_nested(self.scan_qparams),
-            "kernel_buffers": _flatten_nested(self.kernel_buffers),
-            "params": ckpt._flatten(self.params) if self.prequantized else {},
+            "masks": art.masks,
+            "act_absmax": art.act_absmax,
+            "smooth_factors": art.smooth_factors,
+            "scan_qparams": _flatten_nested(art.scan_qparams),
+            "kernel_buffers": _flatten_nested(art.kernel_buffers),
+            "params": ckpt._flatten(art.params) if art.prequantized else {},
         }
         meta = {"format_version": _FORMAT_VERSION,
-                "policy": self.policy.to_json(),
-                "prequantized": self.prequantized,
-                **self.meta}
+                "policy": art.policy.to_json(),
+                "prequantized": art.prequantized,
+                **art.meta}
         return str(ckpt.save_bundle(path, groups, meta))
 
     @classmethod
@@ -202,6 +213,117 @@ class QuantArtifact:
                    scan_qparams=_unflatten_nested(groups["scan_qparams"]),
                    kernel_buffers=_unflatten_nested(groups["kernel_buffers"]),
                    params=params, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# Pack targets: drop the per-weight copy the deployment never reads
+# ---------------------------------------------------------------------------
+
+def _stacked_leaf_ref(params, site: str):
+    """(parent dict, key) addressing the STACKED weight leaf consumed at an
+    eager ``layer{i}/``/``enc{i}/`` site, or None when unaddressable.  The
+    hybrid shared block is excluded: its instance count is not derivable
+    from the leaf shape, so coverage cannot be verified artifact-side."""
+    kind, _, base = split_site(site)
+    path = _SITE_WEIGHT_PATH.get(base)
+    root = {"layer": "layers", "enc": "enc_layers"}.get(kind)
+    if path is None or root is None:
+        return None
+    for candidate in (path, _SITE_WEIGHT_FALLBACK.get(base)):
+        if candidate is None:
+            continue
+        try:
+            node = params[root]
+            for p in candidate[:-1]:
+                node = node[p]
+            node[candidate[-1]]
+            return node, candidate[-1], (root,) + tuple(candidate)
+        except (KeyError, TypeError):
+            continue
+    return None
+
+
+def _replace_leaf(params, path, value):
+    """Copy-on-write leaf replacement (the caller's tree stays untouched)."""
+    new = dict(params)
+    node = new
+    for p in path[:-1]:
+        node[p] = dict(node[p])
+        node = node[p]
+    node[path[-1]] = value
+    return new
+
+
+def _defused_policy(policy: SitePolicy) -> SitePolicy:
+    """Rewrite every fused-backend config to the fake backend (the 'tree'
+    pack target drops the kernel buffers, so fused routing must go too —
+    a policy pointing at buffers that no longer exist would refuse to run)."""
+    def defuse(c: QuantConfig) -> QuantConfig:
+        if c.method != "fp" and getattr(c, "backend", "fake") == "fused":
+            return c.replace(backend="fake")
+        return c
+    return SitePolicy(default=defuse(policy.default),
+                      rules=tuple((p, defuse(c)) for p, c in policy.rules))
+
+
+def apply_pack_target(artifact: "QuantArtifact",
+                      pack_target: str) -> "QuantArtifact":
+    """Drop the duplicate per-weight copy a single-backend deployment never
+    reads (fused sites are otherwise stored twice: int8 ``{"q","s"}`` tree
+    leaf AND packed kernel buffer, ~1 byte/weight each).
+
+      * ``"both"``  — keep both copies (the default; the artifact serves
+        either backend, e.g. fused production + fake calibration-parity);
+      * ``"fused"`` — fused sites keep only the kernel buffers; their
+        packed tree leaves shrink to inert ``[L, 1, ..]`` stubs (the tree
+        stays scan-shaped, and misrouting a stubbed site to the fake
+        backend fails loudly on shape, not silently on garbage).  Only
+        stacked leaves whose EVERY layer is fused are stubbed;
+      * ``"tree"``  — drop the kernel buffers and ``{site}@fused`` scan
+        stacks; the policy's fused backends rewrite to ``fake`` so the
+        artifact stays runnable as-is.
+    """
+    if pack_target not in PACK_TARGETS:
+        raise ValueError(f"unknown pack_target {pack_target!r} "
+                         f"(expected one of {PACK_TARGETS})")
+    if pack_target == "both":
+        return artifact
+    if pack_target == "tree":
+        scan_qp = {k: v for k, v in artifact.scan_qparams.items()
+                   if not k.endswith("@fused")}
+        return dataclasses.replace(
+            artifact, policy=_defused_policy(artifact.policy),
+            kernel_buffers={}, scan_qparams=scan_qp,
+            meta={**artifact.meta, "pack_target": "tree", "n_fused_sites": 0})
+
+    # "fused": stub the tree copy of every fully-fused stacked leaf
+    params = artifact.params
+    if params is None or not artifact.kernel_buffers:
+        return dataclasses.replace(
+            artifact, meta={**artifact.meta, "pack_target": "fused"})
+    seen = set()
+    for site in artifact.kernel_buffers:
+        kind, _, base = split_site(site)
+        if (kind, base) in seen or kind not in ("layer", "enc"):
+            continue
+        seen.add((kind, base))
+        ref = _stacked_leaf_ref(params, site)
+        if ref is None:
+            continue
+        node, key, path = ref
+        leaf = node[key]
+        if not (isinstance(leaf, dict) and "q" in leaf):
+            continue                    # not packed (fp site etc.)
+        n = int(leaf["q"].shape[0])
+        if not all(f"{kind}{i}/{base}" in artifact.kernel_buffers
+                   for i in range(n)):
+            continue                    # partial fused coverage: keep copy
+        stub = {"q": np.zeros((n,) + (1,) * (leaf["q"].ndim - 1), np.int8),
+                "s": np.ones((n,) + (1,) * (leaf["s"].ndim - 1), np.float32)}
+        params = _replace_leaf(params, path, stub)
+    return dataclasses.replace(
+        artifact, params=params,
+        meta={**artifact.meta, "pack_target": "fused"})
 
 
 def _run_calibration(cfg, params, batches, forward) -> CalibrationStats:
@@ -292,12 +414,13 @@ def _pack_kernel_buffers(cfg, params, policy: SitePolicy,
     runtime applies ``X/s``.  muxq-family sites require a calibrated static
     mask — packing bakes the channel permutation offline.
 
-    Fused sites are deliberately ALSO packed into the ``{"q","s"}`` weight
+    Fused sites are by default ALSO packed into the ``{"q","s"}`` weight
     tree (both copies are int8, so the bundle carries ~2 bytes/weight for
     them): the fused path never reads the tree leaves, but the same
     artifact then still serves with the backend overridden to ``fake``
-    (calibration-parity runs, backends without the kernel).  Dropping the
-    dead copy per deployment target is a ROADMAP item.
+    (calibration-parity runs, backends without the kernel).  The
+    ``pack_target`` option of :func:`quantize_model` /
+    :meth:`QuantArtifact.save` drops the copy a deployment never reads.
     """
     buffers: Dict[str, Dict[str, np.ndarray]] = {}
     for site, scfg in _fused_sites(cfg, params, policy):
@@ -322,7 +445,8 @@ def _pack_kernel_buffers(cfg, params, policy: SitePolicy,
 def quantize_model(cfg, params,
                    calib: Union[None, CalibrationStats, Iterable],
                    policy: Union[QuantConfig, SitePolicy], *,
-                   forward=None, prequantize: bool = True) -> QuantArtifact:
+                   forward=None, prequantize: bool = True,
+                   pack_target: str = "both") -> QuantArtifact:
     """calibrate → plan → prequantize → pack, in one call.
 
     ``calib`` is an iterable of batches (run eagerly through ``forward``,
@@ -330,6 +454,9 @@ def quantize_model(cfg, params,
     :class:`CalibrationStats`, or None when the policy needs no calibration
     (all-dynamic, no smoothing).  ``prequantize=False`` skips weight packing
     (the paper's fake-quant evaluation protocol — benchmark grids).
+    ``pack_target`` ("both" | "fused" | "tree") drops the duplicate
+    per-weight copy of fused sites that the deployment never reads — see
+    :func:`apply_pack_target`.
     """
     policy = as_policy(policy)
     stats: Optional[CalibrationStats] = None
@@ -371,11 +498,12 @@ def quantize_model(cfg, params,
                                     smooth_factors=factors)
         buffers = _pack_kernel_buffers(cfg, params, policy, masks, factors)
 
-    return QuantArtifact(
+    art = QuantArtifact(
         policy=policy, masks=masks, act_absmax=absmax, smooth_factors=factors,
         scan_qparams=_stack_qparams(cfg, masks, factors, buffers),
         kernel_buffers=buffers, params=packed,
         meta={"n_sites": len(absmax), "n_fused_sites": len(buffers)})
+    return apply_pack_target(art, pack_target)
 
 
 def save_artifact(artifact: QuantArtifact, path: str) -> str:

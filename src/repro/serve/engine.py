@@ -1,14 +1,20 @@
-"""Batched serving engine: prefill + decode with continuous slot management.
+"""Batched serving engine: prefill + continuous-batching pooled decode.
 
-A fixed pool of ``max_batch`` slots; finished sequences (EOS or length cap)
-free their slot and the next queued request is prefilled into it
-(continuous-batching-lite).  The decode step is a single jit'd program over
-the whole pool, so new arrivals never recompile.
+``ServeEngine`` is the user-facing API; the machinery underneath is the
+``repro.serve`` subsystem:
+
+  * :class:`repro.serve.pool.PagePool` — paged KV-cache block pool (INT8
+    pages + per-(position, head) scales by default, fp pages for parity);
+  * :class:`repro.serve.scheduler.Scheduler` — FIFO admission, preemption,
+    streaming, and ONE jit'd decode step per token for the whole slot pool
+    with a per-slot position vector (misaligned sequences batch; there is
+    no align-or-serialize fallback);
+  * :class:`repro.serve.metrics.ServeMetrics` — tokens/s, TTFT, occupancy.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +26,9 @@ from repro.models import transformer as T
 from repro.models.attention import init_cache
 from repro.models.common import ModelConfig
 from repro.quantize import QuantArtifact
+from repro.serve.metrics import ServeMetrics
+from repro.serve.pool import PagePool
+from repro.serve.scheduler import Scheduler
 
 
 @dataclasses.dataclass
@@ -28,6 +37,8 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # per-request streaming: called with each token the step it is sampled
+    stream: Optional[Callable[[int], None]] = None
 
 
 class ServeEngine:
@@ -44,10 +55,22 @@ class ServeEngine:
     packed single-GEMM MUXQ kernel path in prefill and decode — the stacked
     ``{site}@fused`` buffers ride the ``lax.scan`` layer loop, so the
     traced step never touches (or dequantizes) those sites' weight leaves.
+
+    KV state lives in a paged pool: ``kv_mode='int8'`` stores pages as
+    int8 + per-(position, head) scales (~2x+ cache capacity — the paper's
+    §1 KV-memory motivation), ``kv_mode='fp'`` stores ``cache_dtype``
+    pages (bit-exact parity against the dense cache path when
+    ``cache_dtype`` matches).  The default (``kv_mode=None``) follows the
+    weight path: int8 pages for quantized serving, fp pages for plain fp
+    params — an unquantized model never silently gets a lossy cache.
+    ``cache_dtype`` (default bf16) also sets the prefill cache dtype — fp
+    serving no longer pays a 2x fp32 cache tax.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
-                 s_max: int = 512, quant=None, greedy: bool = True):
+                 s_max: int = 512, quant=None, greedy: bool = True, *,
+                 kv_mode: Optional[str] = None, page_size: int = 16,
+                 n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
         if isinstance(params, QuantArtifact):
             if quant is not None:
@@ -63,6 +86,7 @@ class ServeEngine:
         self.ctx, qparams = as_ctx(quant)
         self.qparams = qparams
         self.greedy = greedy
+        self.cache_dtype = cache_dtype
         # fail at construction, not deep inside a traced layer loop: a policy
         # that routes THIS model's sites to the fused backend needs the
         # packed kernel buffers an artifact built with prequantize=True
@@ -84,77 +108,58 @@ class ServeEngine:
                     "packed kernel buffers are available — build the "
                     "artifact via quantize_model(..., prequantize=True)")
 
-        def decode(params, tokens, cache):
-            logits, cache = T.decode_step(cfg, params, tokens, cache,
-                                          self.ctx, qparams=qparams)
+        if kv_mode is None:
+            kv_mode = "int8" if isinstance(self.ctx, QuantCtx) else "fp"
+        self.pool = PagePool(cfg, max_batch, s_max, page_size=page_size,
+                             n_pages=n_pages, mode=kv_mode, dtype=cache_dtype)
+        self.metrics = ServeMetrics()    # last generate() run's metrics
+        self.decode_traces = 0           # pooled-step (re)trace counter
+
+        def decode(params, tokens, kv, page_table, pos):
+            self.decode_traces += 1      # python side effect: trace time only
+            logits, new_kv = T.decode_step_paged(cfg, params, tokens, kv,
+                                                 page_table, pos, self.ctx,
+                                                 qparams=qparams)
             nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
-            return nxt.astype(jnp.int32), cache
+            return nxt.astype(jnp.int32), new_kv
 
         self._decode = jax.jit(decode, donate_argnums=(2,))
 
+    # -- scheduler plumbing ---------------------------------------------------
+
     def _prefill_one(self, prompt_ids: np.ndarray):
-        """Prefill a single sequence; returns (next_token, cache_b1)."""
+        """Prefill a single sequence; returns (next_token, cache)."""
         tokens = jnp.asarray(prompt_ids)[None]
-        cache = init_cache(self.cfg, 1, self.s_max, dtype=jnp.float32)
+        s = tokens.shape[1]
+        cache = init_cache(self.cfg, 1, s, dtype=self.cache_dtype)
         out = T.forward(self.cfg, self.params, tokens, self.ctx,
                         scan=self.cfg.family != "hybrid", cache=cache,
                         qparams=self.qparams)
         nxt = int(jnp.argmax(out["logits"][0, -1, : self.cfg.vocab_size]))
         return nxt, out["cache"]
 
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Run all requests to completion with slot reuse."""
-        queue = list(requests)
-        slots: List[Optional[Request]] = [None] * self.max_batch
-        caches: List[Optional[dict]] = [None] * self.max_batch
-        last_tok = np.zeros(self.max_batch, np.int32)
+    def _prefill(self, prompt_ids: np.ndarray):
+        nxt, cache = self._prefill_one(prompt_ids)
+        return nxt, cache["k"][:, 0], cache["v"][:, 0]
 
-        def admit():
-            for i in range(self.max_batch):
-                if slots[i] is None and queue:
-                    req = queue.pop(0)
-                    ids = tok.encode(req.prompt)
-                    nxt, cache = self._prefill_one(ids)
-                    req.out_tokens.append(nxt)
-                    slots[i], caches[i] = req, cache
-                    last_tok[i] = nxt
+    def _decode_pool(self, tokens, kv, page_table, pos):
+        return self._decode(self.params, tokens, kv, page_table, pos)
 
-        admit()
-        while any(s is not None for s in slots):
-            # batch the active slots into one pool-wide decode
-            active = [i for i, s in enumerate(slots) if s is not None]
-            # per-slot pos may differ; batch slots into one decode step when
-            # their positions align, else step them individually
-            pos_vals = {int(caches[i]["pos"]) for i in active}
-            if len(pos_vals) == 1 and len(active) > 1:
-                pool_cache = jax.tree.map(
-                    lambda *xs: (jnp.concatenate(xs, axis=1)
-                                 if getattr(xs[0], "ndim", 0) > 1 else xs[0]),
-                    *[caches[i] for i in active])
-                tokens = jnp.asarray(last_tok[active])[:, None]
-                nxt, pool_cache = self._decode(self.params, tokens, pool_cache)
-                outs = np.asarray(nxt)
-                for j, i in enumerate(active):
-                    caches[i] = jax.tree.map(
-                        lambda x: x[:, j:j + 1] if getattr(x, "ndim", 0) > 1 else x,
-                        pool_cache)
-                    self._post_token(slots, caches, last_tok, i, int(outs[j]))
-            else:
-                for i in active:
-                    tokens = jnp.asarray([[last_tok[i]]])
-                    nxt, caches[i] = self._decode(self.params, tokens, caches[i])
-                    self._post_token(slots, caches, last_tok, i, int(nxt[0]))
-            admit()
+    # -- public ---------------------------------------------------------------
+
+    def scheduler(self) -> Scheduler:
+        """A fresh scheduler over this engine's (persistent) page pool."""
+        return Scheduler(self.pool, self._prefill, self._decode_pool)
+
+    def generate(self, requests: List[Request],
+                 arrivals: Optional[Sequence[int]] = None) -> List[Request]:
+        """Run all requests to completion with continuous batching.
+        ``arrivals`` (optional, one decode-step index per request) delays
+        admission — the load-generator hook."""
+        sched = self.scheduler()
+        sched.run(requests, arrivals)
+        self.metrics = sched.metrics
         return requests
-
-    def _post_token(self, slots, caches, last_tok, i, token: int) -> None:
-        req = slots[i]
-        req.out_tokens.append(token)
-        last_tok[i] = token
-        if token == tok.EOS or len(req.out_tokens) >= req.max_new_tokens:
-            req.done = True
-            slots[i] = None
-            caches[i] = None
 
     @staticmethod
     def text(req: Request) -> str:

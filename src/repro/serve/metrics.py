@@ -1,0 +1,78 @@
+"""Serving metrics: throughput, TTFT, pool occupancy, fragmentation.
+
+One :class:`ServeMetrics` instance rides a scheduler run (``ServeEngine``
+keeps a lifetime one).  Counters are plain python — the scheduler updates
+them outside the traced step — and :meth:`report` folds them into the
+summary dict ``launch/serve.py`` prints and ``benchmarks/serve_bench.py``
+persists into ``BENCH_serve.json``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    tokens_out: int = 0          # generated tokens (prefill-sampled + decode)
+    decode_steps: int = 0        # pooled decode step invocations
+    decode_slot_steps: int = 0   # sum of active slots over decode steps
+    prefills: int = 0
+    preemptions: int = 0
+    submitted: int = 0
+    completed: int = 0
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    occupancy: List[float] = dataclasses.field(default_factory=list)
+    fragmentation: List[float] = dataclasses.field(default_factory=list)
+    cache_bytes: int = 0
+    _t0: Optional[float] = None
+    _t1: Optional[float] = None
+
+    def start(self) -> float:
+        self._t0 = time.perf_counter()
+        return self._t0
+
+    def stop(self) -> None:
+        self._t1 = time.perf_counter()
+
+    @property
+    def elapsed_s(self) -> float:
+        if self._t0 is None:
+            return 0.0
+        return (self._t1 or time.perf_counter()) - self._t0
+
+    def record_ttft(self, submit_t: float) -> None:
+        self.ttft_s.append(time.perf_counter() - submit_t)
+
+    def sample_pool(self, pool_stats: Dict[str, float]) -> None:
+        self.occupancy.append(float(pool_stats.get("occupancy", 0.0)))
+        frag = pool_stats.get("internal_fragmentation")
+        if frag is not None:
+            self.fragmentation.append(float(frag))
+        self.cache_bytes = int(pool_stats.get("cache_bytes", self.cache_bytes))
+
+    @staticmethod
+    def _mean(xs: List[float]) -> float:
+        return sum(xs) / len(xs) if xs else 0.0
+
+    def report(self) -> Dict[str, float]:
+        dt = self.elapsed_s
+        return {
+            "tokens_out": self.tokens_out,
+            "tokens_per_sec": self.tokens_out / dt if dt else 0.0,
+            "decode_steps": self.decode_steps,
+            "decode_batch_mean": (self.decode_slot_steps / self.decode_steps
+                                  if self.decode_steps else 0.0),
+            "prefills": self.prefills,
+            "preemptions": self.preemptions,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "ttft_ms_mean": 1e3 * self._mean(self.ttft_s),
+            "ttft_ms_max": 1e3 * max(self.ttft_s) if self.ttft_s else 0.0,
+            "pool_occupancy_mean": self._mean(self.occupancy),
+            "pool_occupancy_peak": max(self.occupancy) if self.occupancy else 0.0,
+            "fragmentation_mean": self._mean(self.fragmentation),
+            "cache_bytes": self.cache_bytes,
+            "elapsed_s": dt,
+        }

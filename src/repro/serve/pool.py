@@ -1,0 +1,203 @@
+"""Paged KV-cache block pool (vLLM-style, CPU-scale reference).
+
+The serving pool stores every slot's K/V in fixed-size *pages* instead of
+one dense ``[b, s_max, ...]`` buffer: a sequence owns ``ceil(len/ps)``
+pages, admitted/finished sequences allocate/free pages in O(1) from a free
+list, and the decode step routes through a per-slot page table — so memory
+scales with *live tokens*, not ``max_batch * s_max``.
+
+Two page modes:
+
+  * ``int8`` — pages hold K/V as int8 with per-(position, head) scales via
+    :func:`repro.serve.kvcache.quantize_kv` (the paper's §1 KV-memory
+    motivation: ~2x capacity per byte of HBM, Oaken-style);
+  * ``fp``   — pages in ``dtype`` (default bf16), the parity-testing mode
+    (bit-exact against the dense cache path).
+
+Layout (``L`` = attention layers, leading so the pool rides ``lax.scan``):
+
+  k/v        [L, n_pages, page_size, kvh, dh]
+  k/v_scale  [L, n_pages, page_size, kvh, 1]   (int8 mode only)
+  page_table [n_slots, pages_per_slot] int32   host-side, 0 = unallocated
+
+Page 0 is a reserved scratch page: inactive slots' decode writes land
+there and are never read back, which keeps the pooled step shape-stable
+with no per-slot control flow.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+from repro.models.attention import n_attn_layers
+from repro.serve.kvcache import cache_bytes, quantize_kv
+
+
+class PagePool:
+    """Fixed-size page pool + per-slot page tables + free-list alloc/free."""
+
+    def __init__(self, cfg: ModelConfig, n_slots: int, s_max: int, *,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 mode: str = "int8", dtype=jnp.bfloat16):
+        if mode not in ("int8", "fp"):
+            raise ValueError(f"unknown page mode {mode!r}")
+        self.cfg, self.mode, self.dtype = cfg, mode, dtype
+        self.n_slots, self.page_size = n_slots, page_size
+        self.pages_per_slot = max(1, math.ceil(s_max / page_size))
+        self.capacity = self.pages_per_slot * page_size  # tokens per slot
+        # +1: page 0 is the reserved scratch page (never allocated)
+        self.n_pages = (n_pages if n_pages is not None
+                        else n_slots * self.pages_per_slot + 1)
+        if self.n_pages < 2:
+            raise ValueError("pool needs at least one allocatable page")
+
+        L, kvh, dh = n_attn_layers(cfg), cfg.n_kv_heads, cfg.head_dim
+        shape = (L, self.n_pages, page_size, kvh, dh)
+        if mode == "int8":
+            self.kv: Dict[str, jnp.ndarray] = {
+                "k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            }
+        else:
+            self.kv = {"k": jnp.zeros(shape, dtype),
+                       "v": jnp.zeros(shape, dtype)}
+        self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self._free = list(range(self.n_pages - 1, 0, -1))  # pop() -> page 1 first
+        self._table_device: Optional[jnp.ndarray] = None
+        # fragmentation/occupancy counters (lifetime, for metrics)
+        self.alloc_count = 0
+        self.free_count = 0
+        self.alloc_failures = 0
+
+    # -- alloc / free --------------------------------------------------------
+
+    @property
+    def pages_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def admit(self, slot: int, n_tokens: int) -> bool:
+        """Allocate the pages covering positions [0, n_tokens) for ``slot``.
+        Returns False (allocating nothing) when the pool lacks free pages."""
+        assert not self.page_table[slot].any(), f"slot {slot} already has pages"
+        need = self.pages_needed(n_tokens)
+        if need > self.pages_per_slot:
+            raise ValueError(
+                f"{n_tokens} tokens need {need} pages > pages_per_slot="
+                f"{self.pages_per_slot} (raise s_max or page_size)")
+        if need > len(self._free):
+            self.alloc_failures += 1
+            return False
+        for j in range(need):
+            self.page_table[slot, j] = self._free.pop()
+        self.alloc_count += need
+        self._table_device = None
+        return True
+
+    def ensure(self, slot: int, page_idx: int) -> bool:
+        """Make sure logical page ``page_idx`` of ``slot`` is backed; grows
+        by one page from the free list.  False on exhaustion."""
+        if self.page_table[slot, page_idx]:
+            return True
+        if not self._free:
+            self.alloc_failures += 1
+            return False
+        self.page_table[slot, page_idx] = self._free.pop()
+        self.alloc_count += 1
+        self._table_device = None
+        return True
+
+    def release(self, slot: int) -> int:
+        """Free every page owned by ``slot``; returns the count."""
+        pages = [int(p) for p in self.page_table[slot] if p]
+        self._free.extend(reversed(pages))
+        self.free_count += len(pages)
+        self.page_table[slot] = 0
+        self._table_device = None
+        return len(pages)
+
+    # -- device state --------------------------------------------------------
+
+    def table(self) -> jnp.ndarray:
+        """The page table as a device array (cached until it changes)."""
+        if self._table_device is None:
+            self._table_device = jnp.asarray(self.page_table)
+        return self._table_device
+
+    def state(self) -> Dict[str, jnp.ndarray]:
+        """The pool's KV arrays (pass into the jit'd decode step; pair with
+        :meth:`adopt` for donation)."""
+        return self.kv
+
+    def adopt(self, kv: Dict[str, jnp.ndarray]) -> None:
+        """Take ownership of the decode step's updated pool arrays."""
+        assert set(kv) == set(self.kv), (set(kv), set(self.kv))
+        self.kv = kv
+
+    # -- prefill write -------------------------------------------------------
+
+    def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
+        """Scatter a prefilled dense cache slice (k/v ``[L, s, kvh, dh]``,
+        compute dtype) into ``slot``'s pages, quantizing in int8 mode.  The
+        slot must already own the pages covering [0, s) (see :meth:`admit`).
+
+        One indexed scatter per pool array (the tail of the slot's last
+        page zero-pads): each eager ``.at[].set`` copies the whole pool
+        array, so a per-page loop would cost O(pages) pool copies per
+        admitted request."""
+        s = k.shape[1]
+        if self.mode == "int8":
+            qc = quantize_kv(k, v)
+            parts = {"k": qc["k"], "v": qc["v"],
+                     "k_scale": qc["k_scale"], "v_scale": qc["v_scale"]}
+        else:
+            parts = {"k": k.astype(self.dtype), "v": v.astype(self.dtype)}
+        n = self.pages_needed(s)
+        pids = self.page_table[slot, :n]
+        assert np.all(pids > 0), (slot, "prefill write into unallocated page")
+        pad = n * self.page_size - s
+        for name, arr in parts.items():
+            a = arr.astype(self.kv[name].dtype)
+            if pad:
+                a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+            a = a.reshape(a.shape[0], n, self.page_size, *a.shape[2:])
+            self.kv[name] = self.kv[name].at[:, jnp.asarray(pids)].set(a)
+
+    # -- accounting ----------------------------------------------------------
+
+    def cache_bytes(self) -> int:
+        """Bytes held by the page pool (all pages, live or free)."""
+        return cache_bytes(self.kv)
+
+    def stats(self, slot_lens: Optional[Dict[int, int]] = None) -> Dict[str, float]:
+        """Occupancy + fragmentation counters.  ``slot_lens`` ({slot: live
+        tokens}) refines internal fragmentation: the fraction of allocated
+        page capacity not holding a live token."""
+        usable = self.n_pages - 1
+        out = {
+            "pages_total": usable,
+            "pages_in_use": self.pages_in_use,
+            "occupancy": self.pages_in_use / usable if usable else 0.0,
+            "alloc_count": self.alloc_count,
+            "free_count": self.free_count,
+            "alloc_failures": self.alloc_failures,
+            "cache_bytes": self.cache_bytes(),
+        }
+        if slot_lens is not None:
+            cap = self.pages_in_use * self.page_size
+            live = sum(slot_lens.values())
+            out["live_tokens"] = live
+            out["internal_fragmentation"] = (1.0 - live / cap) if cap else 0.0
+        return out

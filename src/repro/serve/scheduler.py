@@ -1,0 +1,241 @@
+"""Continuous-batching scheduler over a paged KV pool.
+
+The scheduler owns the serving control loop the engine used to inline:
+
+  * **FIFO admission** — queued requests prefill into free slots as soon as
+    pages are available (arrival steps optionally gate admission for load
+    generators);
+  * **one jit'd decode per step for the WHOLE pool** — slot positions ride
+    a per-slot vector into :func:`repro.models.transformer.decode_step_paged`,
+    so misaligned sequences batch instead of falling back to per-slot
+    decode.  There is no alignment fast path to fall off of: every step is
+    exactly one traced call regardless of slot positions;
+  * **preemption** — when a growing sequence needs a page and the pool is
+    exhausted, the longest live sequence is evicted (pages freed, request
+    requeued at the front) and later resumed by re-prefilling prompt +
+    generated tokens.  With fp pages at the prefill cache dtype the replay
+    reproduces the evicted cache bit for bit; with int8 pages it is
+    approximate — the replaying prefill attends over in-flight
+    full-precision K/V where the evicted decode attended over dequantized
+    int8 pages, so post-resume hidden states can drift within quantization
+    noise;
+  * **streaming** — each emitted token is pushed through the request's
+    ``stream`` callback the step it is sampled;
+  * **metrics** — tokens/s, TTFT, pool occupancy and fragmentation via
+    :class:`repro.serve.metrics.ServeMetrics`.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import tokenizer as tok
+from repro.serve.metrics import ServeMetrics
+from repro.serve.pool import PagePool
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: object                 # repro.serve.engine.Request
+    submit_t: float
+
+
+class Scheduler:
+    """Drives a request set to completion against one :class:`PagePool`.
+
+    ``prefill_fn(ids) -> (next_token, k, v)`` runs a single sequence's
+    prefill and returns the sampled next token plus the dense per-layer K/V
+    slices ``[L, s, kvh, dh]`` to scatter into pages.  ``decode_fn(tokens,
+    kv, page_table, pos) -> (next_tokens, new_kv)`` is the jit'd pool-wide
+    step (the engine binds params/ctx/qparams)."""
+
+    def __init__(self, pool: PagePool,
+                 prefill_fn: Callable, decode_fn: Callable, *,
+                 eos: int = tok.EOS,
+                 metrics: Optional[ServeMetrics] = None):
+        self.pool = pool
+        self.prefill = prefill_fn
+        self.decode = decode_fn
+        self.eos = eos
+        self.metrics = metrics if metrics is not None else ServeMetrics()
+        n = pool.n_slots
+        self.slots: List[Optional[_Slot]] = [None] * n
+        self.pos = np.zeros(n, np.int32)        # per-slot live length
+        self.last_tok = np.zeros(n, np.int32)
+
+    # -- public --------------------------------------------------------------
+
+    def run(self, requests: Sequence, arrivals: Optional[Sequence[int]] = None):
+        """Run all requests to completion.  ``arrivals`` (optional, one int
+        per request) gates admission on the decode-step clock — the load
+        generator's Poisson arrival hook; default: everything at step 0."""
+        m = self.metrics
+        m.start()
+        if arrivals is None:
+            arrivals = [0] * len(requests)
+        if len(arrivals) != len(requests):
+            raise ValueError(f"{len(requests)} requests but {len(arrivals)} "
+                             "arrival steps (zip would silently drop work)")
+        # pre-flight: reject oversized prompts BEFORE any pool allocation,
+        # so a malformed request can't abort mid-run with pages held
+        for req in requests:
+            need = len(self._request_ids(req)) + 1
+            if need > self.pool.capacity and not req.out_tokens:
+                raise ValueError(
+                    f"prompt of {need - 1} tokens exceeds slot capacity "
+                    f"{self.pool.capacity - 1} (raise s_max)")
+        queue = collections.deque(
+            [req, int(arr), None] for req, arr in
+            sorted(zip(requests, arrivals), key=lambda p: p[1]))
+        m.submitted += len(requests)
+        step_clock = 0
+
+        try:
+            self._run_loop(queue, step_clock)
+        except BaseException:
+            # never leave the (engine-persistent) pool dirty: drop every
+            # live slot so later generate() calls start from a clean pool
+            for i, s in enumerate(self.slots):
+                if s is not None:
+                    self.pool.release(i)
+                    self.slots[i] = None
+                    self.pos[i] = 0
+            raise
+        m.stop()
+        return list(requests)
+
+    def _run_loop(self, queue, step_clock: int) -> None:
+        m = self.metrics
+        while queue or any(self.slots):
+            # a request's TTFT clock starts when it ARRIVES (its arrival
+            # step is reached), not when run() starts — otherwise the load
+            # generator's arrival schedule would inflate the queueing delay
+            now = None
+            for entry in queue:
+                if entry[2] is None and entry[1] <= step_clock:
+                    entry[2] = now = now or time.perf_counter()
+            self._admit(queue, step_clock)
+            if not any(self.slots):
+                if queue:           # everything pending is a future arrival
+                    step_clock += 1
+                    continue
+                break
+            self._ensure_pages(queue)
+            active = [i for i, s in enumerate(self.slots) if s is not None]
+            if not active:
+                continue            # capacity finishes / self-preemption
+
+            # ONE jit'd decode for the whole pool, per-slot positions inside
+            nxt, new_kv = self.decode(
+                jnp.asarray(self.last_tok)[:, None], self.pool.state(),
+                self.pool.table(), jnp.asarray(self.pos))
+            self.pool.adopt(new_kv)
+            outs = np.asarray(nxt)
+            m.decode_steps += 1
+            m.decode_slot_steps += len(active)
+            step_clock += 1
+            for i in active:
+                self.pos[i] += 1
+                self._post_token(i, int(outs[i]))
+            live = {i: int(self.pos[i]) for i, s in enumerate(self.slots) if s}
+            m.sample_pool(self.pool.stats(live))
+
+    # -- admission -----------------------------------------------------------
+
+    def _request_ids(self, req) -> np.ndarray:
+        """Prefill token ids: the prompt, plus — after a preemption — every
+        generated token but the last (which becomes the next decode input)."""
+        ids = tok.encode(req.prompt)
+        if req.out_tokens:
+            ids = np.concatenate(
+                [ids, np.asarray(req.out_tokens[:-1], np.int32)])
+        return ids
+
+    def _admit(self, queue, step_clock: int) -> None:
+        while queue and queue[0][1] <= step_clock:
+            free = [i for i, s in enumerate(self.slots) if s is None]
+            if not free:
+                return
+            req, _, submit_t = queue[0]
+            ids = self._request_ids(req)
+            if len(ids) + 1 > self.pool.capacity:
+                if req.out_tokens:      # resumed at capacity: done, truncated
+                    queue.popleft()
+                    req.done = True
+                    self.metrics.completed += 1
+                    continue
+                raise ValueError(
+                    f"prompt of {len(ids)} tokens exceeds slot capacity "
+                    f"{self.pool.capacity - 1} (raise s_max)")
+            slot = free[0]
+            if not self.pool.admit(slot, len(ids)):
+                if not any(self.slots):
+                    raise ValueError(
+                        f"pool exhausted with no live sequences: {len(ids)} "
+                        f"tokens need {self.pool.pages_needed(len(ids))} "
+                        f"pages, {self.pool.pages_free} free")
+                return                  # FIFO: wait for pages, don't skip
+            queue.popleft()
+            nxt, k, v = self.prefill(ids)
+            self.pool.write_prefill(slot, k, v)
+            self.metrics.prefills += 1
+            fresh = not req.out_tokens
+            self.slots[slot] = _Slot(req, submit_t)
+            self.pos[slot] = len(ids)
+            if fresh:
+                self.metrics.record_ttft(submit_t)
+                self._post_token(slot, int(nxt))
+                if self.slots[slot] is None:
+                    continue            # one-token request: done at prefill
+            self.last_tok[slot] = req.out_tokens[-1]
+
+    # -- paging / preemption --------------------------------------------------
+
+    def _ensure_pages(self, queue) -> None:
+        """Back every live slot's next write position with a page; on
+        exhaustion, preempt the longest live sequence and retry."""
+        for i in range(len(self.slots)):
+            if self.slots[i] is None:
+                continue
+            if self.pos[i] >= self.pool.capacity:
+                self._finish(i)         # slot full: out of cache headroom
+                continue
+            page_idx = int(self.pos[i]) // self.pool.page_size
+            while self.slots[i] is not None \
+                    and not self.pool.ensure(i, page_idx):
+                live = [j for j, s in enumerate(self.slots) if s is not None]
+                victim = max(live, key=lambda j: int(self.pos[j]))
+                self._preempt(victim, queue)
+
+    def _preempt(self, slot: int, queue) -> None:
+        st = self.slots[slot]
+        self.pool.release(slot)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.metrics.preemptions += 1
+        queue.appendleft([st.req, 0, st.submit_t])
+
+    # -- token bookkeeping ----------------------------------------------------
+
+    def _post_token(self, slot: int, token: int) -> None:
+        req = self.slots[slot].req
+        req.out_tokens.append(token)
+        self.last_tok[slot] = token
+        self.metrics.tokens_out += 1
+        stream = getattr(req, "stream", None)
+        if stream is not None:
+            stream(token)
+        if token == self.eos or len(req.out_tokens) >= req.max_new_tokens:
+            self._finish(slot)
+
+    def _finish(self, slot: int) -> None:
+        self.slots[slot].req.done = True
+        self.pool.release(slot)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.metrics.completed += 1

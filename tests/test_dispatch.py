@@ -294,6 +294,74 @@ def test_old_format_v1_bundle_still_loads(tmp_path, small_model):
     assert bool(jnp.array_equal(lg1, lg2))
 
 
+def test_pack_target_fused_drops_tree_copy(tmp_path, small_model):
+    """pack_target='fused': fused sites keep only the kernel buffers; their
+    packed tree leaves shrink to inert stubs, output is unchanged, and the
+    bundle round-trips through the normal load path."""
+    cfg, params, batches = small_model
+    art = quantize_model(cfg, params, batches, SitePolicy.uniform(FUSED))
+    art_f = quantize_model(cfg, params, batches, SitePolicy.uniform(FUSED),
+                           pack_target="fused")
+    q = art_f.params["layers"]["attn"]["wqkv"]["q"]
+    assert q.shape == (cfg.n_layers, 1, 1)       # stub, not a weight copy
+    assert set(art_f.kernel_buffers) == set(art.kernel_buffers)
+    toks = jnp.asarray(batches[0]["tokens"])
+    dispatch.set_fused_impl("ref")
+    lg, _ = _logits(cfg, art, toks)
+    lg_f, _ = _logits(cfg, art_f, toks)
+    assert bool(jnp.array_equal(lg, lg_f))
+    # save-time variant: smaller bundle, same logits after load
+    p_both, p_fused = tmp_path / "both", tmp_path / "fused"
+    art.save(str(p_both))
+    art.save(str(p_fused), pack_target="fused")
+    size = lambda d: sum(f.stat().st_size for f in d.glob("*"))
+    assert size(p_fused) < size(p_both)
+    art2 = QuantArtifact.load(str(p_fused))
+    assert art2.meta.get("pack_target") == "fused"
+    lg2, _ = _logits(cfg, art2, toks)
+    assert bool(jnp.array_equal(lg, lg2))
+
+
+def test_pack_target_tree_drops_kernel_buffers(tmp_path, small_model):
+    """pack_target='tree': kernel buffers and @fused scan stacks are
+    dropped, fused routing rewrites to the fake backend, and the loaded
+    bundle (missing kernel_buffers.npz entirely) matches the fake-backend
+    artifact bit for bit."""
+    cfg, params, batches = small_model
+    art = quantize_model(cfg, params, batches, SitePolicy.uniform(FUSED))
+    path = tmp_path / "tree"
+    art.save(str(path), pack_target="tree")
+    assert not (path / "kernel_buffers.npz").exists()
+    art_t = QuantArtifact.load(str(path))
+    assert art_t.kernel_buffers == {}
+    assert not any(k.endswith("@fused") for k in art_t.scan_qparams)
+    assert art_t.policy.default.backend == "fake"
+    toks = jnp.asarray(batches[0]["tokens"])
+    art_fake = quantize_model(cfg, params, batches, SitePolicy.uniform(BASE))
+    lg_t, ctx = _logits(cfg, art_t, toks)
+    lg_k, _ = _logits(cfg, art_fake, toks)
+    assert bool(jnp.array_equal(lg_t, lg_k))
+    assert set(ctx.backend_log.values()) == {"fake"}
+    with pytest.raises(ValueError, match="pack_target"):
+        art.save(str(tmp_path / "x"), pack_target="everything")
+
+
+def test_pack_target_fused_keeps_partial_coverage(small_model):
+    """A site fused in only SOME form (here: mixed policy keeps attn_out on
+    the fake backend) must keep its real tree copy — only fully-fused
+    stacked leaves stub out."""
+    cfg, params, batches = small_model
+    pol = SitePolicy(default=FUSED, rules=(("*attn_out", BASE),))
+    art = quantize_model(cfg, params, batches, pol, pack_target="fused")
+    assert art.params["layers"]["attn"]["wo"]["q"].shape[1] > 1  # real copy
+    assert art.params["layers"]["attn"]["wqkv"]["q"].shape == (cfg.n_layers, 1, 1)
+    toks = jnp.asarray(batches[0]["tokens"])
+    dispatch.set_fused_impl("ref")
+    lg, ctx = _logits(cfg, art, toks)
+    assert bool(jnp.all(jnp.isfinite(lg)))
+    assert ctx.backend_log["layer0/attn_out"] == "fake"
+
+
 def test_future_format_version_refuses(tmp_path, small_model):
     cfg, params, batches = small_model
     art = quantize_model(cfg, params, batches, SitePolicy.uniform(BASE))

@@ -1,0 +1,77 @@
+"""serve/kvcache.py unit coverage: quantize/dequantize round-trip error
+bound, the init_int8_cache shape/pos contract, and cache_bytes accounting
+against the fp cache (these utilities previously shipped untested)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.attention import init_cache, n_attn_layers
+from repro.serve import kvcache
+
+
+def test_quantize_kv_round_trip_error_bound():
+    """Per-(position, head) abs-max int8: elementwise round-trip error is
+    bounded by half an LSB, scale = amax/127 over the head_dim axis."""
+    k = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32), jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 4, 32), jnp.float32)
+    # exercise widely varying per-position dynamic ranges
+    scale = jnp.exp(jnp.linspace(-3, 3, 16))[None, :, None, None]
+    k, v = k * scale, v * scale
+    qc = kvcache.quantize_kv(k, v)
+    kd, vd = kvcache.dequantize_kv(qc, jnp.float32)
+    for x, xd, s in ((k, kd, qc["k_scale"]), (v, vd, qc["v_scale"])):
+        amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+        np.testing.assert_allclose(np.asarray(s), amax / 127.0, rtol=1e-6)
+        lsb = amax / 127.0
+        assert np.all(np.abs(np.asarray(xd) - np.asarray(x))
+                      <= lsb / 2 + 1e-7), "round-trip exceeds half-LSB bound"
+
+
+def test_quantize_kv_shapes_dtypes_and_zero_vectors():
+    k = jnp.zeros((1, 4, 2, 8), jnp.bfloat16)
+    v = jnp.ones((1, 4, 2, 8), jnp.bfloat16)
+    qc = kvcache.quantize_kv(k, v)
+    assert qc["k"].dtype == jnp.int8 and qc["v"].dtype == jnp.int8
+    assert qc["k_scale"].dtype == jnp.float32
+    assert qc["k_scale"].shape == (1, 4, 2, 1)
+    assert int(np.max(np.abs(np.asarray(qc["v"])))) <= 127
+    # all-zero vectors hit the 1e-6 scale floor and stay exactly zero
+    kd, _ = kvcache.dequantize_kv(qc, jnp.float32)
+    assert np.all(np.asarray(kd) == 0.0)
+
+
+def test_init_int8_cache_contract():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    b, s = 2, 16
+    c = kvcache.init_int8_cache(cfg, b, s)
+    n, kv, dh = n_attn_layers(cfg), cfg.n_kv_heads, cfg.head_dim
+    assert c["k"].shape == (n, b, s, kv, dh) and c["k"].dtype == jnp.int8
+    assert c["v"].shape == (n, b, s, kv, dh) and c["v"].dtype == jnp.int8
+    assert c["k_scale"].shape == (n, b, s, kv, 1)
+    assert c["k_scale"].dtype == jnp.float32
+    assert c["pos"].dtype == jnp.int32 and int(c["pos"]) == 0
+    assert c["pos"].shape == ()
+
+
+def test_cache_bytes_accounting_vs_fp_cache():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    b, s = 2, 16
+    n, kv, dh = n_attn_layers(cfg), cfg.n_kv_heads, cfg.head_dim
+    elems = n * b * s * kv
+    c8 = kvcache.init_int8_cache(cfg, b, s)
+    expect8 = 2 * elems * dh * 1 + 2 * elems * 1 * 4 + 4   # k/v + scales + pos
+    assert kvcache.cache_bytes(c8) == expect8
+    c32 = init_cache(cfg, b, s, dtype=jnp.float32)
+    expect32 = 2 * elems * dh * 4 + 4
+    assert kvcache.cache_bytes(c32) == expect32
+    c16 = init_cache(cfg, b, s, dtype=jnp.bfloat16)
+    expect16 = 2 * elems * dh * 2 + 4
+    assert kvcache.cache_bytes(c16) == expect16
+    # int8+scales vs fp: the K/V payload compresses 4x (vs fp32) / 2x (vs
+    # bf16); the per-(pos, head) f32 scales add exactly 4/dh per element
+    ratio32 = (kvcache.cache_bytes(c8) - 4) / (kvcache.cache_bytes(c32) - 4)
+    assert ratio32 == pytest.approx((1 + 4 / dh) / 4)
+    ratio16 = (kvcache.cache_bytes(c8) - 4) / (kvcache.cache_bytes(c16) - 4)
+    assert ratio16 == pytest.approx((1 + 4 / dh) / 2)

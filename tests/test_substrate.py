@@ -186,7 +186,9 @@ def test_engine_greedy_matches_manual_decode():
     for _ in range(3):
         lg, c = decode_step(cfg, params, jnp.asarray([[manual[-1]]]), c)
         manual.append(int(jnp.argmax(lg[0, -1, :cfg.vocab_size])))
-    eng = ServeEngine(cfg, params, max_batch=1, s_max=64)
+    # fp pages at the manual path's cache dtype: paged decode is bit-exact
+    eng = ServeEngine(cfg, params, max_batch=1, s_max=64, kv_mode="fp",
+                      cache_dtype=jnp.float32)
     req = Request("abc", max_new_tokens=4)
     eng.generate([req])
     assert req.out_tokens == manual
