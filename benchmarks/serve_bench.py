@@ -6,8 +6,13 @@ execution backends (``fused`` packed-kernel / ``fake`` quantize-dequantize /
 ``fp``) and page modes (``int8`` pages + per-(pos, head) scales vs ``fp``
 pages), and emits a machine-readable ``results/BENCH_serve.json``
 ({case: {tokens_per_sec, ttft_ms_mean, pool occupancy/fragmentation,
-preemptions, ...}}) so serving-throughput trajectory across PRs can be
-tracked by CI next to ``BENCH_kernels.json``.
+preemptions, kv_bytes_read / kv_bytes_read_dense / kv_read_savings,
+decode_buckets, prefix sharing stats, ...}}) so serving-throughput AND
+decode read-traffic trajectory across PRs can be tracked by CI next to
+``BENCH_kernels.json``.  In ``--smoke`` mode the run asserts the
+block-sparse page-budget gather read strictly fewer KV bytes than the old
+full-capacity gather would have (the CI regression gate for the paged
+decode path).
 
 CLI:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
@@ -96,6 +101,7 @@ def run_case(backend: str, kv_mode: str, *, smoke: bool = True,
     assert all(r.done for r in reqs)
     rep = eng.metrics.report()
     rep["decode_traces"] = eng.decode_traces
+    rep["decode_buckets_seen"] = sorted(eng.decode_buckets)  # engine lifetime
     return rep
 
 
@@ -112,7 +118,8 @@ def run(emit: bool = True, smoke: bool = True, **kw):
             rows.append((f"serve/decode_{backend}_{kv_mode}", us,
                          f"tokens_per_sec={tps:.1f}"
                          f"_occ={rep['pool_occupancy_mean']:.2f}"
-                         f"_frag={rep['fragmentation_mean']:.2f}"))
+                         f"_frag={rep['fragmentation_mean']:.2f}"
+                         f"_read_savings={rep['kv_read_savings']:.2f}"))
     if emit:
         common.emit(rows)
     return rows
@@ -152,6 +159,12 @@ def main(argv=None) -> int:
             common.emit([(f"serve/decode_{backend}_{kv_mode}",
                           1e6 / tps if tps else 0.0,
                           f"tokens_per_sec={tps:.1f}")])
+            if args.smoke:
+                # CI gate: short sequences must not pay the slot-capacity
+                # read tax — the bucketed gather reads strictly fewer bytes
+                assert 0 < rep["kv_bytes_read"] < rep["kv_bytes_read_dense"], (
+                    backend, kv_mode, rep["kv_bytes_read"],
+                    rep["kv_bytes_read_dense"])
     results["_config"] = {
         "smoke": args.smoke, "n_requests": n_requests, "rate": args.rate,
         "max_batch": args.max_batch, "s_max": s_max,

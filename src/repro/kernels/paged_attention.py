@@ -1,0 +1,247 @@
+"""Pallas TPU kernel: paged-attention decode (vLLM-style block-sparse KV).
+
+One decode step of the serving pool reads each slot's K/V *through its page
+table*: the kernel never materializes the gathered ``[b, pages*ps, ...]``
+key range that the jnp reference builds — page ids ride a scalar-prefetch
+page table straight into the BlockSpec index maps, so the grid's innermost
+dimension streams one physical page per step from HBM and accumulates
+flash-attention-style (running max / denominator / un-normalized
+accumulator in VMEM scratch).  INT8 pages are dequantized in-kernel from
+their per-(position, head) scales — the int8 bytes are what crosses HBM.
+
+The page table arrives pre-sliced to the scheduler's bucketed page budget
+(``pages`` = table.shape[1]), so read traffic scales with the longest live
+sequence, not the slot capacity.
+
+Execution selection mirrors ``repro.kernels.dispatch``:
+
+  * ``auto``      — compiled Pallas on TPU, the jnp reference on CPU;
+  * ``pallas``    — force compiled kernels;
+  * ``interpret`` — interpret-mode Pallas (the CPU parity protocol);
+  * ``ref``       — the jnp gather reference (bit-identical to the dense
+                    full-range gather the serve tests pin against).
+
+GQA rides in the grid: programs iterate (slot, kv_head, page) and each
+program attends all ``h // kvh`` query heads of its group at once, so the
+broadcast KV never materializes (same trick as ``flash_attention``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e9          # matches models/attention.NEG_INF (parity)
+NO_WINDOW = 1 << 30     # "sliding window off" sentinel (int32-safe)
+
+PagedImpl = Literal["auto", "pallas", "interpret", "ref"]
+
+_PAGED_IMPL: PagedImpl = "auto"
+
+
+def set_paged_impl(impl: PagedImpl) -> PagedImpl:
+    """Select how paged-attention decode executes; returns the previous
+    setting.  ``auto`` (default): compiled Pallas on TPU, the jnp gather
+    reference on CPU.  ``interpret`` forces interpret-mode Pallas (CPU
+    parity tests), ``ref`` forces the reference, ``pallas`` forces
+    compiled kernels."""
+    global _PAGED_IMPL
+    if impl not in ("auto", "pallas", "interpret", "ref"):
+        raise ValueError(f"unknown paged impl {impl!r}")
+    prev, _PAGED_IMPL = _PAGED_IMPL, impl
+    return prev
+
+
+def paged_impl() -> str:
+    """The resolved (non-auto) paged-attention execution mode."""
+    if _PAGED_IMPL != "auto":
+        return _PAGED_IMPL
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+# ---------------------------------------------------------------------------
+# jnp reference (the math the serve tests pin bit-exact on fp pages)
+# ---------------------------------------------------------------------------
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
+                        k_scale=None, v_scale=None, window=None,
+                        softcap: Optional[float] = None):
+    """Gather-then-attend reference.  q [b, h, dh]; k/v_pages
+    [n_pages, ps, kvh, dh] (+ optional [n_pages, ps, kvh, 1] int8 scales);
+    page_table [b, pages] int32; pos [b] int32; ``window`` a traced or
+    static int32 scalar (``NO_WINDOW`` disables).  Returns [b, h, dh].
+
+    The op sequence mirrors ``models.attention.sdpa`` exactly — including
+    the singleton query-sequence dim riding through the grouped einsums —
+    so fp pages stay BIT-exact against the dense cache decode path (the
+    serve parity tests pin this)."""
+    b, h, dh = q.shape
+    kvh = k_pages.shape[2]
+    g = h // kvh
+
+    def gather(pages):
+        gp = pages[page_table]                        # [b, P, ps, kvh, *]
+        return gp.reshape(b, -1, *gp.shape[3:])
+
+    kk, vv = gather(k_pages), gather(v_pages)
+    if k_scale is not None:
+        kk = (kk.astype(jnp.float32) * gather(k_scale)).astype(q.dtype)
+        vv = (vv.astype(jnp.float32) * gather(v_scale)).astype(q.dtype)
+    else:
+        kk = kk.astype(q.dtype)
+        vv = vv.astype(q.dtype)
+
+    window = NO_WINDOW if window is None else window
+    kpos = jnp.arange(kk.shape[1])[None, :]           # [1, P*ps]
+    allow = (kpos <= pos[:, None]) & (kpos > pos[:, None] - window)
+    bias = jnp.where(allow, 0.0, NEG_INF)[:, None, None, :].astype(jnp.float32)
+
+    qg = q.reshape(b, 1, kvh, g, dh)                  # [b, sq=1, kv, g, dh]
+    scale = dh ** -0.5
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kk).astype(jnp.float32) * scale
+    if softcap is not None:
+        scores = (softcap * jnp.tanh(scores.astype(jnp.float32) / softcap)
+                  ).astype(scores.dtype)
+    scores = scores + bias[:, :, None]                # group-dim broadcast
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vv)
+    return out.reshape(b, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _kernel(tab_ref, pos_ref, win_ref,              # scalar prefetch
+            q_ref, k_ref, v_ref, ks_ref, vs_ref,    # blocks (scales opt.)
+            o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, nj: int, ps: int, int8: bool,
+            softcap: Optional[float]):
+    bb, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)               # [g, dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)            # [ps, dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    if int8:
+        k = k * ks_ref[0, :, 0].astype(jnp.float32)   # [ps, 1] bcast
+        v = v * vs_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    # logical key positions of page j: [j*ps, (j+1)*ps)
+    pos = pos_ref[bb]
+    win = win_ref[0]
+    g = q.shape[0]
+    kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
+    allow = (kpos <= pos) & (kpos > pos - win)
+    s = jnp.where(allow, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [g, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                            # [g, ps]
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
+                           k_scale=None, v_scale=None, window=None,
+                           softcap: Optional[float] = None,
+                           interpret: bool = False):
+    """Pallas paged-attention decode.  Same contract as
+    :func:`paged_attention_ref`; the page table and per-slot positions ride
+    scalar prefetch so the K/V BlockSpec index maps load physical pages
+    directly (no gathered intermediate)."""
+    b, h, dh = q.shape
+    n_pages, ps, kvh, _ = k_pages.shape
+    assert h % kvh == 0
+    g = h // kvh
+    nj = page_table.shape[1]
+    int8 = k_scale is not None
+    scale = dh ** -0.5
+
+    table = page_table.astype(jnp.int32)
+    pos32 = pos.astype(jnp.int32)
+    win = jnp.full((1,), NO_WINDOW if window is None else window, jnp.int32)
+    qg = q.reshape(b, kvh, g, dh)
+
+    # page blocks: physical page tab[b, j], kv head hh, all ps positions
+    kv_spec = pl.BlockSpec(
+        (1, ps, 1, dh),
+        lambda bb, hh, j, tab, pos_r, win_r: (tab[bb, j], 0, hh, 0))
+    sc_spec = pl.BlockSpec(
+        (1, ps, 1, 1),
+        lambda bb, hh, j, tab, pos_r, win_r: (tab[bb, j], 0, hh, 0))
+    q_spec = pl.BlockSpec(
+        (1, 1, g, dh), lambda bb, hh, j, tab, pos_r, win_r: (bb, hh, 0, 0))
+
+    in_specs = [q_spec, kv_spec, kv_spec]
+    args = [qg, k_pages, v_pages]
+    if int8:
+        in_specs += [sc_spec, sc_spec]
+        args += [k_scale, v_scale]
+    else:
+        # inert placeholders so the kernel signature stays uniform
+        in_specs += [
+            pl.BlockSpec((1, 1), lambda bb, hh, j, tab, pos_r, win_r: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bb, hh, j, tab, pos_r, win_r: (0, 0)),
+        ]
+        args += [jnp.zeros((1, 1), jnp.float32),
+                 jnp.zeros((1, 1), jnp.float32)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, nj),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, 1, g, dh), lambda bb, hh, j, tab, pos_r, win_r: (bb, hh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, dh), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, nj=nj, ps=ps, int8=int8,
+                          softcap=softcap),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        interpret=interpret,
+    )(table, pos32, win, *args)
+    return out.reshape(b, h, dh)
+
+
+def paged_attention_decode(q, k_pages, v_pages, page_table, pos, *,
+                           k_scale=None, v_scale=None, window=None,
+                           softcap: Optional[float] = None,
+                           impl: Optional[str] = None):
+    """Impl-dispatching entry point (see :func:`set_paged_impl`)."""
+    if impl in (None, "auto"):
+        impl = paged_impl()
+    if impl == "ref":
+        return paged_attention_ref(
+            q, k_pages, v_pages, page_table, pos, k_scale=k_scale,
+            v_scale=v_scale, window=window, softcap=softcap)
+    return paged_attention_pallas(
+        q, k_pages, v_pages, page_table, pos, k_scale=k_scale,
+        v_scale=v_scale, window=window, softcap=softcap,
+        interpret=(impl == "interpret"))

@@ -83,7 +83,12 @@ def main(argv=None) -> int:
           f"pool occupancy mean {rep['pool_occupancy_mean']:.2f} "
           f"peak {rep['pool_occupancy_peak']:.2f}; "
           f"fragmentation {rep['fragmentation_mean']:.2f}; "
-          f"kv pages [{engine.pool.mode}] {rep['cache_bytes']} bytes")
+          f"kv pages [{engine.pool.mode}] {rep['cache_bytes']} bytes; "
+          f"decode read savings {rep['kv_read_savings']:.0%} "
+          f"(block-sparse {rep['kv_bytes_read']} vs dense "
+          f"{rep['kv_bytes_read_dense']} bytes); "
+          f"prefix hits {rep['prefix_hits']} "
+          f"(cow {rep['cow_copies']})")
     return 0
 
 

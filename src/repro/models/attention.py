@@ -19,6 +19,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import paged_attention as PA
 from repro.models.common import ModelConfig, apply_rope, dense_init, softcap
 from repro.parallel.act_sharding import cache_update_mode
 
@@ -202,7 +203,16 @@ def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     The new K/V is scattered into page ``page_table[b, pos//ps]`` at offset
     ``pos % ps``; attention reads the slot's logical key range via a page
     gather and masks per slot with ``kpos <= pos[b]`` (+ sliding window), so
-    no alignment between slots is ever required."""
+    no alignment between slots is ever required.
+
+    **Block-sparse reads**: the read budget is the page table's width — the
+    scheduler passes ``page_table[:, :bucket]`` where ``bucket`` covers the
+    longest live sequence's ``ceil(pos/ps)`` pages, so a short sequence in
+    a deep pool never gathers its slot's full logical capacity.  The read
+    side lives in :mod:`repro.kernels.paged_attention`: on TPU the Pallas
+    kernel (page-table-indexed K/V loads, int8 pages dequantized
+    in-kernel), on CPU the jnp gather reference — the fp-page serve tests
+    pin the reference bit-exact against the dense cache path."""
     sq = sq or {}
     b, one, d = x.shape
     pos = cache["pos"]                                      # [b]
@@ -237,23 +247,17 @@ def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         cks = cache["k_scale"].at[page_idx, offset].set(ks_w[:, 0])
         cvs = cache["v_scale"].at[page_idx, offset].set(vs_w[:, 0])
 
-    # gather each slot's logical key range: [b, P, ps, ...] -> [b, P*ps, ...]
-    def gather(pool):
-        g = pool[page_table]
-        return g.reshape(b, -1, *g.shape[3:])
-
-    kk, vv = gather(ck), gather(cv)
-    if int8_kv:
-        kk = (kk.astype(jnp.float32) * gather(cks)).astype(x.dtype)
-        vv = (vv.astype(jnp.float32) * gather(cvs)).astype(x.dtype)
-    else:
-        kk = kk.astype(x.dtype)
-        vv = vv.astype(x.dtype)
-    kpos = jnp.arange(kk.shape[1])[None, :]                 # [1, P*ps]
-    in_window = kpos > pos[:, None] - cfg.window_size
-    allow = (kpos <= pos[:, None]) & (in_window | ~jnp.asarray(window_flag))
-    bias = jnp.where(allow, 0.0, NEG_INF)[:, None, None, :].astype(jnp.float32)
-    o = sdpa(cfg, q, kk, vv, bias)
+    # read path: the jnp gather reference on CPU, the Pallas kernel
+    # (page-table-indexed loads, in-kernel int8 dequant) on TPU/interpret —
+    # both in repro.kernels.paged_attention.  The traced per-layer window
+    # flag folds into an effective-window scalar either way.
+    win = jnp.where(jnp.asarray(window_flag), cfg.window_size,
+                    PA.NO_WINDOW).astype(jnp.int32)
+    o = PA.paged_attention_decode(
+        q[:, 0], ck, cv, page_table, pos,
+        k_scale=cks if int8_kv else None,
+        v_scale=cvs if int8_kv else None,
+        window=win, softcap=cfg.attn_softcap)[:, None]
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
               smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))

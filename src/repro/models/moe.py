@@ -42,8 +42,17 @@ def init_moe(key, cfg: ModelConfig) -> dict:
     return p
 
 
-def _capacity(cfg: ModelConfig, n_tokens: int, factor: float = 1.25) -> int:
-    c = int(factor * cfg.top_k * n_tokens / cfg.n_experts)
+def _capacity(cfg: ModelConfig, n_tokens: int,
+              factor: Optional[float] = 1.25) -> int:
+    """Per-expert slot count for one dispatch group.
+
+    ``factor=None`` is the dropless sizing: an expert can receive at most
+    every token in the group once (top-k picks distinct experts), so
+    ``n_tokens`` slots can never overflow — no token is ever dropped."""
+    if factor is None:
+        c = n_tokens
+    else:
+        c = int(factor * cfg.top_k * n_tokens / cfg.n_experts)
     return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU lanes
 
 
@@ -81,10 +90,18 @@ def _combine_group(out_e: jnp.ndarray, slot, st, sg, keep, t: int):
 
 
 def moe(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
-        sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        sq: Optional[Dict] = None, *, train: bool = False
+        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x: [b, s, d] -> (out, aux_loss).  Groups = batch rows when s > 1
     (training / prefill; keeps dispatch shard-local), one flat group for
-    decode (s == 1: tokens-per-step is tiny)."""
+    decode (s == 1: tokens-per-step is tiny).
+
+    ``train=True`` sizes the dispatch buffer with the classic capacity
+    factor and DROPS over-capacity tokens (throughput compromise: the
+    [g, e, C, d] all-to-all buffer stays small).  Inference (the default)
+    is dropless — prefill and decode route a token through exactly the
+    experts it picked, so ``decode_step`` reproduces ``forward`` instead of
+    diverging whenever a hot expert overflows its prefill capacity."""
     sq = sq or {}
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
@@ -100,7 +117,7 @@ def moe(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
                         p["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                        # [g, tg, e]
-    cap = _capacity(cfg, tg)
+    cap = _capacity(cfg, tg, factor=1.25 if train else None)
 
     buf, slot, st, sg_, keep = jax.vmap(
         lambda xf, pr: _dispatch_group(cfg, xf, pr, cap))(xg, probs)

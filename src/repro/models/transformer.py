@@ -98,7 +98,7 @@ def layer_slice(tree, i):
 # ---------------------------------------------------------------------------
 
 def _dense_block(cfg, lp, ctx, x, positions, window_flag, sq, cache=None,
-                 prefix: str = "", causal: bool = True):
+                 prefix: str = "", causal: bool = True, train: bool = False):
     x = constrain(x)
     h = apply_norm(cfg, lp["ln1"], x)
     a, cache = A.attention(cfg, lp["attn"], _Named(ctx, prefix), h, positions,
@@ -109,7 +109,8 @@ def _dense_block(cfg, lp, ctx, x, positions, window_flag, sq, cache=None,
     h = apply_norm(cfg, lp["ln2"], x)
     aux = jnp.float32(0)
     if "moe" in lp:
-        m, aux = E.moe(cfg, lp["moe"], _Named(ctx, prefix), h, sq=sq)
+        m, aux = E.moe(cfg, lp["moe"], _Named(ctx, prefix), h, sq=sq,
+                       train=train)
     else:
         m = M.mlp(cfg, lp["mlp"], _Named(ctx, prefix), h, sq=sq)
     if cfg.sandwich_norm:
@@ -185,13 +186,16 @@ def _sq_for_layer(qparams, i=None):
 
 def forward(cfg: ModelConfig, params, tokens, ctx=None, *, extra=None,
             scan: bool = True, cache: Optional[dict] = None,
-            qparams: Optional[Dict[str, jnp.ndarray]] = None
-            ) -> Dict[str, Any]:
+            qparams: Optional[Dict[str, jnp.ndarray]] = None,
+            train: bool = False) -> Dict[str, Any]:
     """Full-sequence forward.
 
     Returns {"logits": [b, s, V], "aux": moe-aux-loss, "cache": updated}.
     ``cache`` (optional) is a stacked prefill KV cache to fill.
     ``qparams``: {site: [L, channels]} static MUXQ outlier masks.
+    ``train=True`` enables the capacity-factor MoE dispatch (over-capacity
+    tokens drop); the inference default is dropless so prefill routing
+    matches per-token decode routing exactly.
     """
     ctx = ctx or FpCtx()
     fam = cfg.family
@@ -215,7 +219,8 @@ def forward(cfg: ModelConfig, params, tokens, ctx=None, *, extra=None,
                                 cache=cache, qparams=qparams)
     else:
         x, aux_total, new_cache = _run_dense(cfg, params, x, positions, ctx,
-                                             scan=scan, cache=cache, qparams=qparams)
+                                             scan=scan, cache=cache,
+                                             qparams=qparams, train=train)
 
     x = apply_norm(cfg, params["ln_f"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -224,7 +229,8 @@ def forward(cfg: ModelConfig, params, tokens, ctx=None, *, extra=None,
     return {"logits": logits, "aux": aux_total, "cache": new_cache}
 
 
-def _run_dense(cfg, params, x, positions, ctx, *, scan, cache, qparams):
+def _run_dense(cfg, params, x, positions, ctx, *, scan, cache, qparams,
+               train=False):
     flags = _window_flags(cfg)
     if not scan:
         aux_total = jnp.float32(0)
@@ -234,7 +240,7 @@ def _run_dense(cfg, params, x, positions, ctx, *, scan, cache, qparams):
             c_i = None if cache is None else {"k": cache["k"][i], "v": cache["v"][i]}
             x, aux, c_i = _dense_block(cfg, lp, ctx, x, positions, flags[i],
                                        _sq_for_layer(qparams, i), cache=c_i,
-                                       prefix=f"layer{i}/")
+                                       prefix=f"layer{i}/", train=train)
             aux_total = aux_total + aux
             if c_i is not None:
                 ks.append(c_i["k"]); vs.append(c_i["v"])
@@ -248,7 +254,8 @@ def _run_dense(cfg, params, x, positions, ctx, *, scan, cache, qparams):
         x, aux_total = carry
         lp, flag, sq, c_k, c_v = xs
         c_i = None if c_k is None else {"k": c_k, "v": c_v}
-        x, aux, c_i = _dense_block(cfg, lp, ctx, x, positions, flag, sq, cache=c_i)
+        x, aux, c_i = _dense_block(cfg, lp, ctx, x, positions, flag, sq,
+                                   cache=c_i, train=train)
         y = (c_i["k"], c_i["v"]) if c_i is not None else (jnp.zeros(()), jnp.zeros(()))
         return (x, aux_total + aux), y
 
@@ -539,10 +546,17 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
 
     tokens [b, 1]; ``kv`` = {"k"/"v": [L, n_pages, ps, kvh, dh]} (int8 pages
     add "k_scale"/"v_scale" [L, n_pages, ps, kvh, 1]); ``page_table``
-    [b, pages_per_slot] int32; ``pos`` [b] int32.  Returns
+    [b, page_budget] int32; ``pos`` [b] int32.  Returns
     (logits [b, 1, V], updated kv dict).  Unlike :func:`decode_step` the
     position is per slot, so misaligned sequences decode in ONE traced step
-    — the continuous-batching scheduler's invariant.  Dense/MoE only (the
+    — the continuous-batching scheduler's invariant.
+
+    ``page_table``'s width IS the read budget: the scheduler slices the
+    pool table to the bucketed live-page maximum, so attention gathers
+    ``budget * ps`` key positions per slot instead of the slot's full
+    logical capacity (block-sparse decode reads).  The only requirement is
+    ``pos[b] // ps < budget`` for every live slot — the write page and all
+    read pages must sit inside the sliced table.  Dense/MoE only (the
     families ``ServeEngine`` serves)."""
     ctx = ctx or FpCtx()
     if cfg.family not in ("dense", "moe"):
@@ -595,12 +609,14 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
 # ---------------------------------------------------------------------------
 
 def lm_loss(cfg: ModelConfig, params, batch, ctx=None, *, scan=True,
-            qparams=None, aux_weight: float = 0.01) -> Tuple[jnp.ndarray, Dict]:
+            qparams=None, aux_weight: float = 0.01,
+            train: bool = True) -> Tuple[jnp.ndarray, Dict]:
     """batch: {"tokens": [b,s], "labels": [b,s], optional "mask", "patches",
-    "frames"}."""
+    "frames"}.  ``train`` (default True — this is the trainer's loss)
+    selects capacity-factor MoE dispatch; pass False for dropless eval."""
     extra = {k: batch[k] for k in ("patches", "frames") if k in batch}
     out = forward(cfg, params, batch["tokens"], ctx, extra=extra or None,
-                  scan=scan, qparams=qparams)
+                  scan=scan, qparams=qparams, train=train)
     logits = out["logits"]
     if cfg.n_patches and "patches" in batch:   # vlm: loss over text positions
         logits = logits[:, -batch["tokens"].shape[1]:]

@@ -20,10 +20,19 @@ import jax
 import jax.numpy as jnp
 
 
+def axis_size(axis: str) -> int:
+    """Static size of a named mesh axis inside shard_map/pmap.
+
+    ``jax.lax.axis_size`` was removed from the installed JAX;
+    ``psum(1, axis)`` is the supported idiom and constant-folds to a python
+    int at trace time (loop bounds and ring permutations stay static)."""
+    return jax.lax.psum(1, axis)
+
+
 def hierarchical_psum(x: jnp.ndarray, fast_axis: str, slow_axis: str) -> jnp.ndarray:
     """psum over (slow x fast) with slow-axis traffic reduced by
     reduce-scatter/all-gather over the fast axis first."""
-    n_fast = jax.lax.axis_size(fast_axis)
+    n_fast = axis_size(fast_axis)
     # pad leading dim to the fast-axis size for an even scatter
     lead = x.shape[0]
     pad = (-lead) % n_fast
@@ -45,7 +54,7 @@ def allgather_matmul(x_shard: jnp.ndarray, w_local: jnp.ndarray,
     permute of shard t+1 overlaps the GEMM of shard t on hardware with
     async collectives.
     """
-    p = jax.lax.axis_size(axis)
+    p = axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % p) for i in range(p)]
     m_shard = x_shard.shape[0]
@@ -63,7 +72,7 @@ def allgather_matmul(x_shard: jnp.ndarray, w_local: jnp.ndarray,
 def ring_allreduce_reference(x: jnp.ndarray, axis: str) -> jnp.ndarray:
     """Educational ring all-reduce via 2(p-1) ppermute steps (tested against
     lax.psum for exactness)."""
-    p = jax.lax.axis_size(axis)
+    p = axis_size(axis)
     if p == 1:
         return x
     perm = [(i, (i + 1) % p) for i in range(p)]

@@ -24,6 +24,8 @@ from typing import Callable
 import jax
 import jax.numpy as jnp
 
+from repro.parallel.collectives import axis_size
+
 
 def pipeline_apply(block_fn: Callable, stage_params, x_micro: jnp.ndarray,
                    axis: str) -> jnp.ndarray:
@@ -37,7 +39,7 @@ def pipeline_apply(block_fn: Callable, stage_params, x_micro: jnp.ndarray,
     Returns [n_micro, mb, ...] final-stage outputs (valid on the last
     stage; callers psum/broadcast as needed).
     """
-    n_stages = jax.lax.axis_size(axis)
+    n_stages = axis_size(axis)
     stage = jax.lax.axis_index(axis)
     n_micro = x_micro.shape[0]
     n_ticks = n_micro + n_stages - 1

@@ -5,11 +5,16 @@
 
   * :class:`repro.serve.pool.PagePool` — paged KV-cache block pool (INT8
     pages + per-(position, head) scales by default, fp pages for parity);
-  * :class:`repro.serve.scheduler.Scheduler` — FIFO admission, preemption,
-    streaming, and ONE jit'd decode step per token for the whole slot pool
-    with a per-slot position vector (misaligned sequences batch; there is
-    no align-or-serialize fallback);
-  * :class:`repro.serve.metrics.ServeMetrics` — tokens/s, TTFT, occupancy.
+  * :class:`repro.serve.scheduler.Scheduler` — FIFO admission with prefix
+    sharing (common prompt prefixes map the same refcounted pages,
+    copy-on-write on divergence), preemption, streaming, and ONE jit'd
+    decode step per token for the whole slot pool with a per-slot position
+    vector (misaligned sequences batch; there is no align-or-serialize
+    fallback).  Decode reads are block-sparse: each step gathers only the
+    bucketed page budget the longest live sequence needs, so short
+    sequences never pay the slot-capacity read tax;
+  * :class:`repro.serve.metrics.ServeMetrics` — tokens/s, TTFT, occupancy,
+    decode KV bytes read (block-sparse vs dense) and sharing stats.
 """
 from __future__ import annotations
 
@@ -70,7 +75,8 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  s_max: int = 512, quant=None, greedy: bool = True, *,
                  kv_mode: Optional[str] = None, page_size: int = 16,
-                 n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16):
+                 n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16,
+                 prefix_sharing: bool = True):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
         if isinstance(params, QuantArtifact):
             if quant is not None:
@@ -83,6 +89,7 @@ class ServeEngine:
                                  "params plus quant=artifact")
         self.cfg, self.params = cfg, params
         self.max_batch, self.s_max = max_batch, s_max
+        self.prefix_sharing = prefix_sharing
         self.ctx, qparams = as_ctx(quant)
         self.qparams = qparams
         self.greedy = greedy
@@ -114,6 +121,7 @@ class ServeEngine:
                              n_pages=n_pages, mode=kv_mode, dtype=cache_dtype)
         self.metrics = ServeMetrics()    # last generate() run's metrics
         self.decode_traces = 0           # pooled-step (re)trace counter
+        self.decode_buckets = set()      # page-budget buckets seen (lifetime)
 
         def decode(params, tokens, kv, page_table, pos):
             self.decode_traces += 1      # python side effect: trace time only
@@ -123,6 +131,9 @@ class ServeEngine:
             nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
             return nxt.astype(jnp.int32), new_kv
 
+        # one compiled executable per page-budget bucket (the table's width):
+        # the scheduler buckets ceil(pos/ps) to powers of two, so the step
+        # retraces once per bucket, never per sequence length
         self._decode = jax.jit(decode, donate_argnums=(2,))
 
     # -- scheduler plumbing ---------------------------------------------------
@@ -143,13 +154,15 @@ class ServeEngine:
         return nxt, cache["k"][:, 0], cache["v"][:, 0]
 
     def _decode_pool(self, tokens, kv, page_table, pos):
+        self.decode_buckets.add(int(page_table.shape[1]))
         return self._decode(self.params, tokens, kv, page_table, pos)
 
     # -- public ---------------------------------------------------------------
 
     def scheduler(self) -> Scheduler:
         """A fresh scheduler over this engine's (persistent) page pool."""
-        return Scheduler(self.pool, self._prefill, self._decode_pool)
+        return Scheduler(self.pool, self._prefill, self._decode_pool,
+                         prefix_sharing=self.prefix_sharing)
 
     def generate(self, requests: List[Request],
                  arrivals: Optional[Sequence[int]] = None) -> List[Request]:

@@ -1,10 +1,17 @@
-"""Serving metrics: throughput, TTFT, pool occupancy, fragmentation.
+"""Serving metrics: throughput, TTFT, pool occupancy, fragmentation,
+decode KV read traffic and prefix-sharing stats.
 
 One :class:`ServeMetrics` instance rides a scheduler run (``ServeEngine``
 keeps a lifetime one).  Counters are plain python — the scheduler updates
 them outside the traced step — and :meth:`report` folds them into the
 summary dict ``launch/serve.py`` prints and ``benchmarks/serve_bench.py``
 persists into ``BENCH_serve.json``.
+
+The KV read counters price the block-sparse decode: ``kv_bytes_read`` is
+what the bucketed page-budget gather actually read; ``kv_bytes_read_dense``
+is what the old full-capacity gather (``pages_per_slot`` pages per slot
+per step) would have read for the same steps.  Their ratio is the decode
+read-traffic saving the paged-attention work exists to deliver.
 """
 from __future__ import annotations
 
@@ -26,6 +33,16 @@ class ServeMetrics:
     occupancy: List[float] = dataclasses.field(default_factory=list)
     fragmentation: List[float] = dataclasses.field(default_factory=list)
     cache_bytes: int = 0
+    # block-sparse decode read accounting
+    kv_bytes_read: int = 0         # bucketed page-budget gather (actual)
+    kv_bytes_read_dense: int = 0   # full-capacity gather (counterfactual)
+    decode_buckets: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # prefix sharing
+    prefix_hits: int = 0           # admissions that mapped shared pages
+    shared_pages_mapped: int = 0   # pages mapped instead of allocated
+    pages_shared_peak: int = 0     # peak pages with refcount > 1
+    cow_copies: int = 0            # copy-on-write page copies THIS run
+    cow_baseline: int = 0          # pool-lifetime cow count at run start
     _t0: Optional[float] = None
     _t1: Optional[float] = None
 
@@ -45,12 +62,26 @@ class ServeMetrics:
     def record_ttft(self, submit_t: float) -> None:
         self.ttft_s.append(time.perf_counter() - submit_t)
 
+    def record_read(self, pool, bucket: int) -> None:
+        """Account one pooled decode step's KV page reads: ``bucket`` pages
+        per slot actually gathered vs the dense ``pages_per_slot``."""
+        per_page = pool.page_read_bytes()
+        self.kv_bytes_read += pool.n_slots * bucket * per_page
+        self.kv_bytes_read_dense += pool.n_slots * pool.pages_per_slot * per_page
+        self.decode_buckets[bucket] = self.decode_buckets.get(bucket, 0) + 1
+
     def sample_pool(self, pool_stats: Dict[str, float]) -> None:
         self.occupancy.append(float(pool_stats.get("occupancy", 0.0)))
         frag = pool_stats.get("internal_fragmentation")
         if frag is not None:
             self.fragmentation.append(float(frag))
         self.cache_bytes = int(pool_stats.get("cache_bytes", self.cache_bytes))
+        self.pages_shared_peak = max(
+            self.pages_shared_peak, int(pool_stats.get("pages_shared", 0)))
+        # pool counters are lifetime (the pool outlives each generate());
+        # subtract the run-start baseline so the report stays per-run
+        if "cow_count" in pool_stats:
+            self.cow_copies = int(pool_stats["cow_count"]) - self.cow_baseline
 
     @staticmethod
     def _mean(xs: List[float]) -> float:
@@ -74,5 +105,15 @@ class ServeMetrics:
             "pool_occupancy_peak": max(self.occupancy) if self.occupancy else 0.0,
             "fragmentation_mean": self._mean(self.fragmentation),
             "cache_bytes": self.cache_bytes,
+            "kv_bytes_read": self.kv_bytes_read,
+            "kv_bytes_read_dense": self.kv_bytes_read_dense,
+            "kv_read_savings": (1.0 - self.kv_bytes_read / self.kv_bytes_read_dense
+                                if self.kv_bytes_read_dense else 0.0),
+            "decode_buckets": {str(k): v for k, v in
+                               sorted(self.decode_buckets.items())},
+            "prefix_hits": self.prefix_hits,
+            "shared_pages_mapped": self.shared_pages_mapped,
+            "pages_shared_peak": self.pages_shared_peak,
+            "cow_copies": self.cow_copies,
             "elapsed_s": dt,
         }

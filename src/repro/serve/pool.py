@@ -19,10 +19,28 @@ Layout (``L`` = attention layers, leading so the pool rides ``lax.scan``):
   k/v        [L, n_pages, page_size, kvh, dh]
   k/v_scale  [L, n_pages, page_size, kvh, 1]   (int8 mode only)
   page_table [n_slots, pages_per_slot] int32   host-side, 0 = unallocated
+  refcount   [n_pages] int32                   host-side page sharing state
 
 Page 0 is a reserved scratch page: inactive slots' decode writes land
 there and are never read back, which keeps the pooled step shape-stable
 with no per-slot control flow.
+
+**Prefix sharing / copy-on-write.**  Pages are refcounted so two slots
+whose prompts share a prefix can map the *same* physical pages for the
+shared positions (:meth:`admit` with ``share_from``/``shared_pages``).
+K/V at position p depends only on tokens [0, p] under causal attention, so
+identical prefixes produce identical pages — sharing is lossless.  A
+shared page is read-only: before any slot writes into it (a decode token
+landing in a shared tail page) the scheduler calls
+:meth:`ensure_writable`, which copies the page to a private one
+(copy-on-write) so the sibling slot's history is never corrupted.
+
+**Block-sparse read budget.**  The decode step reads only the page-table
+columns the *longest live* sequence needs (``ceil(pos/ps)`` pages,
+bucketed to powers of two by :meth:`bucket_pages` so the pooled step
+compiles once per bucket instead of once per length), not the full
+``pages_per_slot`` capacity; :meth:`page_read_bytes` prices one page
+across all layers for the bytes-read metrics.
 """
 from __future__ import annotations
 
@@ -68,12 +86,16 @@ class PagePool:
             self.kv = {"k": jnp.zeros(shape, dtype),
                        "v": jnp.zeros(shape, dtype)}
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
+        self.refcount = np.zeros(self.n_pages, np.int32)
         self._free = list(range(self.n_pages - 1, 0, -1))  # pop() -> page 1 first
         self._table_device: Optional[jnp.ndarray] = None
         # fragmentation/occupancy counters (lifetime, for metrics)
         self.alloc_count = 0
         self.free_count = 0
         self.alloc_failures = 0
+        # prefix-sharing counters (lifetime)
+        self.share_count = 0      # pages mapped into a second+ slot
+        self.cow_count = 0        # copy-on-write page copies
 
     # -- alloc / free --------------------------------------------------------
 
@@ -88,21 +110,43 @@ class PagePool:
     def pages_needed(self, n_tokens: int) -> int:
         return max(1, math.ceil(n_tokens / self.page_size))
 
-    def admit(self, slot: int, n_tokens: int) -> bool:
+    def admit(self, slot: int, n_tokens: int, *,
+              share_from: Optional[int] = None,
+              shared_pages: int = 0) -> bool:
         """Allocate the pages covering positions [0, n_tokens) for ``slot``.
-        Returns False (allocating nothing) when the pool lacks free pages."""
+        Returns False (allocating/mapping nothing) when the pool lacks free
+        pages.
+
+        With ``share_from``/``shared_pages``, the first ``shared_pages``
+        logical pages are MAPPED from ``share_from``'s page table instead of
+        freshly allocated (prefix sharing): the physical pages' refcounts go
+        up and both slots read the same K/V until a copy-on-write
+        (:meth:`ensure_writable`) splits them."""
         assert not self.page_table[slot].any(), f"slot {slot} already has pages"
         need = self.pages_needed(n_tokens)
         if need > self.pages_per_slot:
             raise ValueError(
                 f"{n_tokens} tokens need {need} pages > pages_per_slot="
                 f"{self.pages_per_slot} (raise s_max or page_size)")
-        if need > len(self._free):
+        assert 0 <= shared_pages <= need, (shared_pages, need)
+        if shared_pages:
+            assert share_from is not None and share_from != slot
+            src = self.page_table[share_from, :shared_pages]
+            assert np.all(src > 0), (
+                share_from, "prefix share from unallocated source pages")
+        if need - shared_pages > len(self._free):
             self.alloc_failures += 1
             return False
-        for j in range(need):
-            self.page_table[slot, j] = self._free.pop()
-        self.alloc_count += need
+        for j in range(shared_pages):
+            pid = int(self.page_table[share_from, j])
+            self.page_table[slot, j] = pid
+            self.refcount[pid] += 1
+        self.share_count += shared_pages
+        for j in range(shared_pages, need):
+            pid = self._free.pop()
+            self.page_table[slot, j] = pid
+            self.refcount[pid] = 1
+        self.alloc_count += need - shared_pages
         self._table_device = None
         return True
 
@@ -114,19 +158,56 @@ class PagePool:
         if not self._free:
             self.alloc_failures += 1
             return False
-        self.page_table[slot, page_idx] = self._free.pop()
+        pid = self._free.pop()
+        self.page_table[slot, page_idx] = pid
+        self.refcount[pid] = 1
         self.alloc_count += 1
         self._table_device = None
         return True
 
+    def ensure_writable(self, slot: int, page_idx: int) -> bool:
+        """Back logical page ``page_idx`` AND make it private to ``slot``.
+
+        An unbacked page allocates (:meth:`ensure`); a page shared with a
+        sibling slot (refcount > 1) is copied on write — the slot gets a
+        fresh physical page holding the same K/V, the sibling keeps the
+        original untouched.  False on pool exhaustion."""
+        if not self.ensure(slot, page_idx):
+            return False
+        old = int(self.page_table[slot, page_idx])
+        if self.refcount[old] <= 1:
+            return True
+        if not self._free:
+            self.alloc_failures += 1
+            return False
+        new = self._free.pop()
+        # device-side page copy across every pool array (all layers at once)
+        for name in self.kv:
+            self.kv[name] = self.kv[name].at[:, new].set(self.kv[name][:, old])
+        self.refcount[old] -= 1
+        self.refcount[new] = 1
+        self.page_table[slot, page_idx] = new
+        self.alloc_count += 1
+        self.cow_count += 1
+        self._table_device = None
+        return True
+
     def release(self, slot: int) -> int:
-        """Free every page owned by ``slot``; returns the count."""
-        pages = [int(p) for p in self.page_table[slot] if p]
-        self._free.extend(reversed(pages))
-        self.free_count += len(pages)
+        """Drop every page mapping owned by ``slot``; pages whose refcount
+        hits zero return to the free list.  Returns the number of pages
+        actually freed (shared pages survive with the sibling slot)."""
+        freed = []
+        for p in self.page_table[slot]:
+            if not p:
+                continue
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                freed.append(int(p))
+        self._free.extend(reversed(freed))
+        self.free_count += len(freed)
         self.page_table[slot] = 0
         self._table_device = None
-        return len(pages)
+        return len(freed)
 
     # -- device state --------------------------------------------------------
 
@@ -146,18 +227,53 @@ class PagePool:
         assert set(kv) == set(self.kv), (set(kv), set(self.kv))
         self.kv = kv
 
+    # -- block-sparse read budget --------------------------------------------
+
+    def live_page_counts(self) -> np.ndarray:
+        """Per-slot count of backed logical pages ([n_slots] int) — the
+        live-page vector the scheduler turns into a read budget."""
+        return (self.page_table > 0).sum(axis=1).astype(np.int32)
+
+    def bucket_pages(self, n_needed: int) -> int:
+        """Round a page budget up to the next power of two (clamped to
+        ``pages_per_slot``) so the pooled decode compiles one executable per
+        bucket instead of one per sequence length."""
+        n_needed = max(1, min(n_needed, self.pages_per_slot))
+        b = 1
+        while b < n_needed:
+            b *= 2
+        return min(b, self.pages_per_slot)
+
+    def page_read_bytes(self) -> int:
+        """Bytes one page costs to read across ALL attention layers (K + V
+        + int8 scales) — the unit for the decode bytes-read metrics."""
+        return self.cache_bytes() // self.n_pages
+
     # -- prefill write -------------------------------------------------------
 
-    def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray) -> None:
+    def write_prefill(self, slot: int, k: jnp.ndarray, v: jnp.ndarray, *,
+                      start_pos: int = 0) -> None:
         """Scatter a prefilled dense cache slice (k/v ``[L, s, kvh, dh]``,
         compute dtype) into ``slot``'s pages, quantizing in int8 mode.  The
-        slot must already own the pages covering [0, s) (see :meth:`admit`).
+        slot must already own the pages covering [start_pos, s) (see
+        :meth:`admit`).  ``start_pos`` skips positions covered by
+        prefix-shared pages (they already hold identical K/V and are mapped
+        read-only; writing them would corrupt the sibling slot) and must be
+        page-aligned when anything remains to write.
 
         One indexed scatter per pool array (the tail of the slot's last
         page zero-pads): each eager ``.at[].set`` copies the whole pool
         array, so a per-page loop would cost O(pages) pool copies per
         admitted request."""
         s = k.shape[1]
+        if start_pos >= s:
+            return                      # fully covered by shared pages
+        assert start_pos % self.page_size == 0, (
+            start_pos, "prefill writes must start on a page boundary")
+        first = start_pos // self.page_size
+        if start_pos:
+            k, v = k[:, start_pos:], v[:, start_pos:]
+            s = s - start_pos
         if self.mode == "int8":
             qc = quantize_kv(k, v)
             parts = {"k": qc["k"], "v": qc["v"],
@@ -165,8 +281,10 @@ class PagePool:
         else:
             parts = {"k": k.astype(self.dtype), "v": v.astype(self.dtype)}
         n = self.pages_needed(s)
-        pids = self.page_table[slot, :n]
+        pids = self.page_table[slot, first:first + n]
         assert np.all(pids > 0), (slot, "prefill write into unallocated page")
+        assert np.all(self.refcount[pids] == 1), (
+            slot, "prefill write into a shared page (needs copy-on-write)")
         pad = n * self.page_size - s
         for name, arr in parts.items():
             a = arr.astype(self.kv[name].dtype)
@@ -182,9 +300,9 @@ class PagePool:
         return cache_bytes(self.kv)
 
     def stats(self, slot_lens: Optional[Dict[int, int]] = None) -> Dict[str, float]:
-        """Occupancy + fragmentation counters.  ``slot_lens`` ({slot: live
-        tokens}) refines internal fragmentation: the fraction of allocated
-        page capacity not holding a live token."""
+        """Occupancy + fragmentation + sharing counters.  ``slot_lens``
+        ({slot: live tokens}) refines internal fragmentation: the fraction
+        of allocated page capacity not holding a live token."""
         usable = self.n_pages - 1
         out = {
             "pages_total": usable,
@@ -194,10 +312,16 @@ class PagePool:
             "free_count": self.free_count,
             "alloc_failures": self.alloc_failures,
             "cache_bytes": self.cache_bytes(),
+            "pages_shared": int((self.refcount > 1).sum()),
+            "share_count": self.share_count,
+            "cow_count": self.cow_count,
         }
         if slot_lens is not None:
             cap = self.pages_in_use * self.page_size
             live = sum(slot_lens.values())
             out["live_tokens"] = live
-            out["internal_fragmentation"] = (1.0 - live / cap) if cap else 0.0
+            # clamp at 0: prefix-shared pages serve several slots' tokens at
+            # once, so live tokens can exceed the (deduplicated) capacity
+            out["internal_fragmentation"] = (
+                max(0.0, 1.0 - live / cap) if cap else 0.0)
         return out

@@ -4,12 +4,23 @@ The scheduler owns the serving control loop the engine used to inline:
 
   * **FIFO admission** — queued requests prefill into free slots as soon as
     pages are available (arrival steps optionally gate admission for load
-    generators);
+    generators).  Admission detects a shared prompt prefix with a live
+    slot and maps the covered pages instead of allocating fresh ones
+    (prefix sharing — lossless: causal K/V at position p depends only on
+    tokens [0, p]);
   * **one jit'd decode per step for the WHOLE pool** — slot positions ride
     a per-slot vector into :func:`repro.models.transformer.decode_step_paged`,
     so misaligned sequences batch instead of falling back to per-slot
     decode.  There is no alignment fast path to fall off of: every step is
     exactly one traced call regardless of slot positions;
+  * **block-sparse page budget** — each step passes only the page-table
+    columns the longest live sequence needs (its live-page count from the
+    pool, bucketed to powers of two so there is one compiled executable
+    per bucket, not per length): a 16-token sequence in a 2048-capacity
+    slot reads 1 page of K/V, not 128;
+  * **copy-on-write** — before a decode token lands in a prefix-shared
+    page the pool copies it to a private page, so the sibling slot's
+    history is never corrupted;
   * **preemption** — when a growing sequence needs a page and the pool is
     exhausted, the longest live sequence is evicted (pages freed, request
     requeued at the front) and later resumed by re-prefilling prompt +
@@ -21,8 +32,9 @@ The scheduler owns the serving control loop the engine used to inline:
     noise;
   * **streaming** — each emitted token is pushed through the request's
     ``stream`` callback the step it is sampled;
-  * **metrics** — tokens/s, TTFT, pool occupancy and fragmentation via
-    :class:`repro.serve.metrics.ServeMetrics`.
+  * **metrics** — tokens/s, TTFT, pool occupancy, fragmentation, decode KV
+    bytes read (block-sparse vs the dense capacity gather) and sharing
+    stats via :class:`repro.serve.metrics.ServeMetrics`.
 """
 from __future__ import annotations
 
@@ -43,6 +55,7 @@ from repro.serve.pool import PagePool
 class _Slot:
     req: object                 # repro.serve.engine.Request
     submit_t: float
+    ids: np.ndarray             # the token ids this slot prefilled with
 
 
 class Scheduler:
@@ -52,17 +65,21 @@ class Scheduler:
     prefill and returns the sampled next token plus the dense per-layer K/V
     slices ``[L, s, kvh, dh]`` to scatter into pages.  ``decode_fn(tokens,
     kv, page_table, pos) -> (next_tokens, new_kv)`` is the jit'd pool-wide
-    step (the engine binds params/ctx/qparams)."""
+    step (the engine binds params/ctx/qparams); ``page_table`` arrives
+    sliced to the step's page budget — the kernel side reads the budget off
+    the table's shape."""
 
     def __init__(self, pool: PagePool,
                  prefill_fn: Callable, decode_fn: Callable, *,
                  eos: int = tok.EOS,
-                 metrics: Optional[ServeMetrics] = None):
+                 metrics: Optional[ServeMetrics] = None,
+                 prefix_sharing: bool = True):
         self.pool = pool
         self.prefill = prefill_fn
         self.decode = decode_fn
         self.eos = eos
         self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.prefix_sharing = prefix_sharing
         n = pool.n_slots
         self.slots: List[Optional[_Slot]] = [None] * n
         self.pos = np.zeros(n, np.int32)        # per-slot live length
@@ -76,6 +93,7 @@ class Scheduler:
         generator's Poisson arrival hook; default: everything at step 0."""
         m = self.metrics
         m.start()
+        m.cow_baseline = self.pool.cow_count
         if arrivals is None:
             arrivals = [0] * len(requests)
         if len(arrivals) != len(requests):
@@ -130,14 +148,22 @@ class Scheduler:
             if not active:
                 continue            # capacity finishes / self-preemption
 
+            # block-sparse read budget: the longest live sequence's backed
+            # page count, bucketed so each bucket compiles exactly once
+            counts = self.pool.live_page_counts()
+            bucket = self.pool.bucket_pages(max(int(counts[i])
+                                                for i in active))
+            table = self.pool.table()[:, :bucket]
+
             # ONE jit'd decode for the whole pool, per-slot positions inside
             nxt, new_kv = self.decode(
                 jnp.asarray(self.last_tok)[:, None], self.pool.state(),
-                self.pool.table(), jnp.asarray(self.pos))
+                table, jnp.asarray(self.pos))
             self.pool.adopt(new_kv)
             outs = np.asarray(nxt)
             m.decode_steps += 1
             m.decode_slot_steps += len(active)
+            m.record_read(self.pool, bucket)
             step_clock += 1
             for i in active:
                 self.pos[i] += 1
@@ -156,6 +182,38 @@ class Scheduler:
                 [ids, np.asarray(req.out_tokens[:-1], np.int32)])
         return ids
 
+    def _shared_prefix(self, ids: np.ndarray):
+        """Best prefix-share candidate among live slots: (src_slot,
+        shared_pages, write_from) or (None, 0, 0).
+
+        Whole pages covered by the common prefix are always shareable.  The
+        partial tail page is shareable only when the new prompt lies
+        entirely inside the common prefix (``c == len(ids)``): the slot
+        then writes nothing at prefill, and its first decode write into the
+        shared tail triggers copy-on-write."""
+        if not self.prefix_sharing:
+            return None, 0, 0
+        ps = self.pool.page_size
+        best, best_c = None, 0
+        for i, st in enumerate(self.slots):
+            if st is None:
+                continue
+            src = st.ids
+            n = min(len(src), len(ids))
+            c = int((np.cumprod(src[:n] == ids[:n])).sum())
+            if c > best_c:
+                best, best_c = i, c
+        n_full = best_c // ps
+        partial = best_c == len(ids) and best_c % ps != 0
+        n_share = n_full + (1 if partial else 0)
+        if best is None or n_share == 0:
+            return None, 0, 0
+        # shared pages must actually be backed in the source slot
+        if not np.all(self.pool.page_table[best, :n_share] > 0):
+            return None, 0, 0
+        write_from = len(ids) if partial else n_full * ps
+        return best, n_share, write_from
+
     def _admit(self, queue, step_clock: int) -> None:
         while queue and queue[0][1] <= step_clock:
             free = [i for i, s in enumerate(self.slots) if s is None]
@@ -173,7 +231,9 @@ class Scheduler:
                     f"prompt of {len(ids)} tokens exceeds slot capacity "
                     f"{self.pool.capacity - 1} (raise s_max)")
             slot = free[0]
-            if not self.pool.admit(slot, len(ids)):
+            src, n_share, write_from = self._shared_prefix(ids)
+            if not self.pool.admit(slot, len(ids), share_from=src,
+                                   shared_pages=n_share):
                 if not any(self.slots):
                     raise ValueError(
                         f"pool exhausted with no live sequences: {len(ids)} "
@@ -182,10 +242,13 @@ class Scheduler:
                 return                  # FIFO: wait for pages, don't skip
             queue.popleft()
             nxt, k, v = self.prefill(ids)
-            self.pool.write_prefill(slot, k, v)
+            self.pool.write_prefill(slot, k, v, start_pos=write_from)
             self.metrics.prefills += 1
+            if n_share:
+                self.metrics.prefix_hits += 1
+                self.metrics.shared_pages_mapped += n_share
             fresh = not req.out_tokens
-            self.slots[slot] = _Slot(req, submit_t)
+            self.slots[slot] = _Slot(req, submit_t, ids)
             self.pos[slot] = len(ids)
             if fresh:
                 self.metrics.record_ttft(submit_t)
@@ -197,7 +260,8 @@ class Scheduler:
     # -- paging / preemption --------------------------------------------------
 
     def _ensure_pages(self, queue) -> None:
-        """Back every live slot's next write position with a page; on
+        """Back every live slot's next write position with a PRIVATE page
+        (allocating, or copy-on-write when the page is prefix-shared); on
         exhaustion, preempt the longest live sequence and retry."""
         for i in range(len(self.slots)):
             if self.slots[i] is None:
@@ -207,7 +271,7 @@ class Scheduler:
                 continue
             page_idx = int(self.pos[i]) // self.pool.page_size
             while self.slots[i] is not None \
-                    and not self.pool.ensure(i, page_idx):
+                    and not self.pool.ensure_writable(i, page_idx):
                 live = [j for j, s in enumerate(self.slots) if s is not None]
                 victim = max(live, key=lambda j: int(self.pos[j]))
                 self._preempt(victim, queue)

@@ -141,6 +141,18 @@ def test_gemma2_features():
     assert float(jnp.max(jnp.abs(base - pert))) > 0  # information flows
 
 
+def test_moe_capacity_dropless_at_inference():
+    """Inference dispatch must be dropless (decode parity depends on it);
+    training keeps the classic capacity factor + drops."""
+    from repro.models.moe import _capacity
+    cfg = get_config("dbrx-132b", reduced=True)
+    for t in (3, 9, 64, 1000):
+        assert _capacity(cfg, t, factor=None) >= t      # can never drop
+    # capacity-factor sizing really is smaller (drops possible) at scale
+    full = get_config("dbrx-132b")
+    assert _capacity(full, 4096, factor=1.25) < 4096
+
+
 def test_moe_aux_loss_nonzero():
     cfg = get_config("dbrx-132b", reduced=True)
     params = init_params(cfg, jax.random.PRNGKey(0))

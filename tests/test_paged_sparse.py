@@ -1,0 +1,369 @@
+"""Block-sparse paged decode + prefix-sharing/copy-on-write pages.
+
+Acceptance criteria covered here:
+  * block-sparse parity — the bucketed page-budget gather is BIT-EXACT
+    against the old full-capacity gather on fp pages, for the fused / fake
+    / fp execution backends (and a sequence of length t gathers only
+    ``bucket(ceil(t/ps))`` pages, priced by the bytes-read metric);
+  * bucketing never retraces within a bucket — the pooled step compiles
+    once per distinct page budget, and a second run over the same length
+    range adds no traces;
+  * prefix sharing — two requests with a common prompt prefix map the same
+    physical pages (fewer pages allocated than two independent requests),
+    stay output-identical to unshared runs on fp pages, and copy-on-write
+    splits a shared tail page before either sibling writes into it;
+    preemption/free with refcounted pages never corrupts the sibling;
+  * the Pallas paged-attention decode kernel (interpret mode) matches the
+    jnp gather reference on fp and int8 pages, with sliding windows and
+    logit softcap.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.muxq import QuantConfig
+from repro.core.policy import SitePolicy
+from repro.kernels import paged_attention as PA
+from repro.models import transformer as T
+from repro.quantize import quantize_model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.pool import PagePool
+
+BASE = QuantConfig(method="muxq", outlier_mode="static",
+                   act_granularity="per_token",
+                   weight_granularity="per_channel", real_int8=True,
+                   muxq_form="fused")
+FUSED = BASE.replace(backend="fused")
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("gpt2-small", reduced=True).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=120)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (2, 16))}
+               for _ in range(2)]
+    return cfg, params, batches
+
+
+@pytest.fixture(scope="module")
+def engines_src(small_model):
+    cfg, params, batches = small_model
+    return {
+        "fp": params,
+        "fake": quantize_model(cfg, params, batches, SitePolicy.uniform(BASE)),
+        "fused": quantize_model(cfg, params, batches,
+                                SitePolicy.uniform(FUSED)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Block-sparse gather parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["fp", "fake", "fused"])
+def test_sparse_gather_bit_exact_vs_full_table(engines_src, small_model,
+                                               backend):
+    """decode_step_paged over the budget-sliced page table == the same step
+    over the full capacity table, bit for bit (fp pages: positions beyond
+    the mask underflow to exactly 0 probability either way)."""
+    cfg, _, _ = small_model
+    from repro.data import tokenizer as tok
+    eng = ServeEngine(cfg, engines_src[backend], max_batch=2, s_max=64,
+                      page_size=8, kv_mode="fp", cache_dtype=jnp.float32)
+    ids = tok.encode("abcdefghijk")          # 12 ids -> 2 pages of 8
+    s = len(ids)
+    nxt, k, v = eng._prefill(ids)
+    assert eng.pool.admit(0, s)
+    eng.pool.write_prefill(0, k, v)
+    assert eng.pool.ensure(0, s // eng.pool.page_size)
+    pos = np.zeros(2, np.int32)
+    pos[0] = s
+    last = np.zeros(2, np.int32)
+    last[0] = nxt
+
+    def step(table):
+        lg, _ = T.decode_step_paged(
+            cfg, eng.params, jnp.asarray(last)[:, None], eng.pool.state(),
+            table, jnp.asarray(pos), eng.ctx, qparams=eng.qparams)
+        return lg
+
+    full = eng.pool.table()                          # [2, 8] capacity table
+    budget = eng.pool.bucket_pages(s // eng.pool.page_size + 1)
+    assert budget == 2 < eng.pool.pages_per_slot     # genuinely sparse
+    lg_full = step(full)
+    lg_sparse = step(full[:, :budget])
+    assert bool(jnp.array_equal(lg_sparse[:1], lg_full[:1])), backend
+
+
+def test_decode_reads_only_bucketed_pages(small_model):
+    """A short sequence's pooled decode gathers ceil(t/ps) pages (bucketed),
+    not pages_per_slot — verified by the bytes-read metric."""
+    cfg, params, _ = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=128, page_size=8,
+                      kv_mode="fp", cache_dtype=jnp.float32)
+    assert eng.pool.pages_per_slot == 16
+    req = Request("abcdef", max_new_tokens=4)        # 7 ids + 4 < one page*2
+    eng.generate([req])
+    m = eng.metrics
+    # every step's budget was the 2-page bucket (pos 7..10 -> 1-2 pages)
+    assert set(m.decode_buckets) <= {1, 2}
+    assert m.kv_bytes_read == sum(
+        b * n * eng.pool.n_slots * eng.pool.page_read_bytes()
+        for b, n in m.decode_buckets.items())
+    # 16-page capacity gather would have read 8x+ more
+    assert m.kv_bytes_read * 8 <= m.kv_bytes_read_dense
+
+
+def test_bucketing_never_retraces_within_bucket(small_model):
+    """One compiled executable per page-budget bucket: a run spanning
+    several buckets traces once per bucket, and a second run over the same
+    lengths adds zero traces."""
+    cfg, params, _ = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                      kv_mode="fp", cache_dtype=jnp.float32)
+    # 26 ids + up to 14 new tokens: buckets 4 (pages 4) after pos 24 etc.
+    eng.generate([Request("a" * 25, max_new_tokens=14),
+                  Request("bc", max_new_tokens=6)])
+    buckets_first = set(eng.decode_buckets)
+    assert len(buckets_first) >= 2                  # spanned several buckets
+    assert eng.decode_traces == len(buckets_first)  # one trace per bucket
+    eng.generate([Request("d" * 25, max_new_tokens=14)])
+    assert set(eng.decode_buckets) == buckets_first
+    assert eng.decode_traces == len(buckets_first)  # no retrace in-bucket
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing + copy-on-write (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_pool_share_refcounts_and_release(small_model):
+    cfg, _, _ = small_model
+    pool = PagePool(cfg, n_slots=3, s_max=32, page_size=8, mode="fp",
+                    dtype=jnp.float32)
+    assert pool.admit(0, 20)                 # 3 pages
+    assert pool.admit(1, 20, share_from=0, shared_pages=2)  # 2 shared + 1
+    assert pool.pages_in_use == 4            # 3 + 1 fresh, 2 deduplicated
+    assert np.array_equal(pool.page_table[1, :2], pool.page_table[0, :2])
+    shared = pool.page_table[0, :2]
+    assert np.all(pool.refcount[shared] == 2)
+    assert pool.stats()["pages_shared"] == 2
+    # releasing the sharer only frees its private page
+    assert pool.release(1) == 1
+    assert np.all(pool.refcount[shared] == 1)
+    assert pool.pages_in_use == 3
+    # releasing the original frees the rest
+    assert pool.release(0) == 3
+    assert pool.pages_free == pool.n_pages - 1
+
+
+def test_pool_cow_splits_shared_page(small_model):
+    cfg, _, _ = small_model
+    pool = PagePool(cfg, n_slots=2, s_max=32, page_size=8, mode="fp",
+                    dtype=jnp.float32)
+    L = pool.kv["k"].shape[0]
+    assert pool.admit(0, 8)
+    k = jnp.arange(L * 8 * cfg.n_kv_heads * cfg.head_dim, dtype=jnp.float32
+                   ).reshape(L, 8, cfg.n_kv_heads, cfg.head_dim)
+    pool.write_prefill(0, k, k * 2)
+    assert pool.admit(1, 8, share_from=0, shared_pages=1)
+    p0 = int(pool.page_table[0, 0])
+    assert int(pool.page_table[1, 0]) == p0
+    # writable without sharing: no copy
+    assert pool.ensure_writable(0, 0) and int(pool.page_table[0, 0]) == p0 \
+        if pool.refcount[p0] == 1 else True
+    # slot 1 wants to write into the shared page -> copy-on-write
+    assert pool.ensure_writable(1, 0)
+    p1 = int(pool.page_table[1, 0])
+    assert p1 != p0 and pool.cow_count == 1
+    assert pool.refcount[p0] == 1 and pool.refcount[p1] == 1
+    # the copy carries the page content, and writing it leaves p0 untouched
+    np.testing.assert_array_equal(np.asarray(pool.kv["k"][:, p1]),
+                                  np.asarray(pool.kv["k"][:, p0]))
+    before = np.asarray(pool.kv["k"][:, p0]).copy()
+    pool.kv["k"] = pool.kv["k"].at[:, p1].set(-1.0)
+    np.testing.assert_array_equal(np.asarray(pool.kv["k"][:, p0]), before)
+
+
+@pytest.mark.parametrize("kv_mode", ["fp", "int8"])
+def test_prefix_share_outputs_identical_and_fewer_pages(small_model, kv_mode):
+    """Two requests sharing a prompt prefix: identical outputs to unshared
+    serving, fewer pages allocated, COW fires when the shared tail page is
+    written."""
+    cfg, params, _ = small_model
+    prompts = ["abcdefghij", "abcdefghij", "abcdefghij klm"]  # 11/11/15 ids
+
+    def run(prefix_sharing):
+        eng = ServeEngine(cfg, params, max_batch=3, s_max=64, page_size=8,
+                          kv_mode=kv_mode, cache_dtype=jnp.float32,
+                          prefix_sharing=prefix_sharing)
+        reqs = [Request(p, max_new_tokens=8) for p in prompts]
+        eng.generate(reqs)
+        return [r.out_tokens for r in reqs], eng
+
+    toks_shared, eng_s = run(True)
+    toks_plain, eng_p = run(False)
+    assert toks_shared == toks_plain, kv_mode
+    m = eng_s.metrics
+    assert m.prefix_hits >= 2 and m.shared_pages_mapped >= 2
+    assert m.pages_shared_peak >= 1
+    # identical prompts end on a partial page -> the first decode write into
+    # the shared tail page must copy-on-write (sibling stays intact, proven
+    # by output equality above)
+    assert eng_s.pool.cow_count >= 1
+    assert eng_p.pool.cow_count == 0
+    # sharing allocated strictly fewer fresh pages for the same work
+    assert eng_s.pool.alloc_count < eng_p.pool.alloc_count
+
+
+def test_prefix_share_preemption_keeps_sibling_intact(small_model):
+    """Preempting/freeing a slot that shares refcounted pages never corrupts
+    the sibling: a page-starved pool (preemptions > 0) still reproduces the
+    uncontended pool's outputs bit for bit on fp pages."""
+    cfg, params, _ = small_model
+    prompts = ["abcdefghijklmnop", "abcdefghijklmnop", "abcdefgh"]
+
+    def run(n_pages):
+        eng = ServeEngine(cfg, params, max_batch=3, s_max=64, page_size=8,
+                          n_pages=n_pages, kv_mode="fp",
+                          cache_dtype=jnp.float32)
+        reqs = [Request(p, max_new_tokens=16) for p in prompts]
+        eng.generate(reqs)
+        return [r.out_tokens for r in reqs], eng
+
+    toks_big, eng_big = run(None)
+    assert eng_big.metrics.prefix_hits >= 1      # sharing actually engaged
+    toks_small, eng_small = run(8)               # 7 usable pages: contended
+    assert eng_small.metrics.preemptions >= 1
+    assert toks_small == toks_big
+    assert eng_small.metrics.completed == 3
+    assert eng_small.pool.pages_in_use == 0      # fully drained, refcounts 0
+    assert not eng_small.pool.refcount.any()
+
+
+def test_share_detection_prefers_longest_prefix(small_model):
+    cfg, params, _ = small_model
+    eng = ServeEngine(cfg, params, max_batch=3, s_max=64, page_size=4,
+                      kv_mode="fp", cache_dtype=jnp.float32)
+    sched = eng.scheduler()
+    # manufacture two live slots with different stored ids
+    from repro.serve.scheduler import _Slot
+    ids_a = np.arange(1, 13, dtype=np.int32)         # 12 ids -> 3 pages
+    ids_b = np.arange(1, 5, dtype=np.int32)
+    assert eng.pool.admit(0, len(ids_a))
+    assert eng.pool.admit(1, len(ids_b))
+    sched.slots[0] = _Slot(object(), 0.0, ids_a)
+    sched.slots[1] = _Slot(object(), 0.0, ids_b)
+    src, n_share, write_from = sched._shared_prefix(
+        np.concatenate([np.arange(1, 11, dtype=np.int32), [99]]))
+    assert src == 0                                   # 10-id prefix beats 4
+    assert n_share == 2 and write_from == 8           # whole pages only
+    # prompt fully inside the prefix: partial tail page shares too
+    src, n_share, write_from = sched._shared_prefix(
+        np.arange(1, 11, dtype=np.int32))             # 10 ids, c == len
+    assert src == 0 and n_share == 3
+    assert write_from == 10                           # nothing to prefill
+    eng.pool.release(0)
+    eng.pool.release(1)
+
+
+# ---------------------------------------------------------------------------
+# Pallas paged-attention kernel parity (interpret vs ref)
+# ---------------------------------------------------------------------------
+
+def _random_paged_case(seed, *, b=3, h=8, kvh=4, dh=16, ps=8, pages=4,
+                       int8=False):
+    rng = np.random.default_rng(seed)
+    n_pages = 1 + b * pages                           # + scratch page 0
+    q = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
+    if int8:
+        kp = jnp.asarray(rng.integers(-127, 128, (n_pages, ps, kvh, dh)),
+                         dtype=jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, (n_pages, ps, kvh, dh)),
+                         dtype=jnp.int8)
+        ks = jnp.asarray(rng.uniform(1e-3, 2e-2, (n_pages, ps, kvh, 1))
+                         .astype(np.float32))
+        vs = jnp.asarray(rng.uniform(1e-3, 2e-2, (n_pages, ps, kvh, 1))
+                         .astype(np.float32))
+    else:
+        kp = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh))
+                         .astype(np.float32))
+        vp = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh))
+                         .astype(np.float32))
+        ks = vs = None
+    # distinct physical pages per slot, scrambled
+    table = np.zeros((b, pages), np.int32)
+    perm = rng.permutation(np.arange(1, n_pages))
+    for i in range(b):
+        table[i] = perm[i * pages:(i + 1) * pages]
+    pos = jnp.asarray(rng.integers(0, pages * ps, b), dtype=jnp.int32)
+    return q, kp, vp, ks, vs, jnp.asarray(table), pos
+
+
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("window,softcap", [(None, None), (5, None),
+                                            (None, 30.0), (7, 50.0)])
+def test_paged_kernel_interpret_matches_ref(int8, window, softcap):
+    q, kp, vp, ks, vs, table, pos = _random_paged_case(
+        0 if not int8 else 1, int8=int8)
+    kw = dict(k_scale=ks, v_scale=vs, window=window, softcap=softcap)
+    ref = PA.paged_attention_ref(q, kp, vp, table, pos, **kw)
+    out = PA.paged_attention_pallas(q, kp, vp, table, pos, interpret=True,
+                                    **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_kernel_respects_page_table_indirection():
+    """Swapping two physical pages while swapping the table entries leaves
+    the output invariant — the kernel really reads through the table."""
+    q, kp, vp, _, _, table, pos = _random_paged_case(2)
+    ref = PA.paged_attention_ref(q, kp, vp, table, pos)
+    a, b_ = int(table[0, 0]), int(table[0, 1])
+    swap = jnp.asarray([a, b_])
+    swapped = jnp.asarray([b_, a])
+    kp2 = kp.at[swap].set(kp[swapped])
+    vp2 = vp.at[swap].set(vp[swapped])
+    table2 = table.at[0, 0].set(b_).at[0, 1].set(a)
+    out = PA.paged_attention_pallas(q, kp2, vp2, table2, pos, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_attention_decode_paged_interpret_impl(small_model):
+    """The model-level paged decode step under set_paged_impl('interpret')
+    (Pallas in-kernel gather + dequant) matches the ref gather within
+    float tolerance, int8 and fp pages."""
+    cfg, params, _ = small_model
+    from repro.data import tokenizer as tok
+    for kv_mode in ("fp", "int8"):
+        eng = ServeEngine(cfg, params, max_batch=2, s_max=32, page_size=8,
+                          kv_mode=kv_mode, cache_dtype=jnp.float32)
+        ids = tok.encode("abcdefghij")
+        nxt, k, v = eng._prefill(ids)
+        assert eng.pool.admit(0, len(ids))
+        eng.pool.write_prefill(0, k, v)
+        assert eng.pool.ensure(0, len(ids) // eng.pool.page_size)
+        pos = np.zeros(2, np.int32)
+        pos[0] = len(ids)
+        last = np.zeros(2, np.int32)
+        last[0] = nxt
+
+        def step():
+            lg, _ = T.decode_step_paged(
+                cfg, eng.params, jnp.asarray(last)[:, None],
+                eng.pool.state(), eng.pool.table(), jnp.asarray(pos),
+                eng.ctx, qparams=eng.qparams)
+            return np.asarray(lg[:1])
+
+        ref = step()
+        prev = PA.set_paged_impl("interpret")
+        try:
+            out = step()
+        finally:
+            PA.set_paged_impl(prev)
+        np.testing.assert_allclose(out, ref, atol=3e-5, rtol=3e-5)
