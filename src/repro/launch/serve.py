@@ -32,6 +32,17 @@ def main(argv=None) -> int:
                          "quantized serving, fp for --quant fp")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV-cache page")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="total pool pages (default: every slot can hold "
+                         "s_max tokens)")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="per-step prompt-token budget: prompts prefill "
+                         "into pool pages at most this many tokens per "
+                         "step, interleaved with the pooled decode")
+    ap.add_argument("--max-batch", type=int, default=2,
+                    help="slot-pool size (concurrent sequences)")
+    ap.add_argument("--s-max", type=int, default=128,
+                    help="per-slot token capacity")
     ap.add_argument("--pack-target", default="both", choices=list(PACK_TARGETS),
                     help="which per-weight copy the artifact keeps for "
                          "fused sites: both | fused | tree")
@@ -45,8 +56,10 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch, reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     kv_mode = None if args.kv_mode == "auto" else args.kv_mode
-    engine_kw = dict(max_batch=2, s_max=128, kv_mode=kv_mode,
-                     page_size=args.page_size, cache_dtype=jnp.bfloat16)
+    engine_kw = dict(max_batch=args.max_batch, s_max=args.s_max,
+                     kv_mode=kv_mode, page_size=args.page_size,
+                     n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
+                     cache_dtype=jnp.bfloat16)
 
     if args.quant == "fp":
         engine = ServeEngine(cfg, params, **engine_kw)
@@ -79,6 +92,10 @@ def main(argv=None) -> int:
     print(f"serve: {rep['tokens_per_sec']:.1f} tok/s over "
           f"{rep['decode_steps']} pooled decode steps "
           f"(batch mean {rep['decode_batch_mean']:.2f}); "
+          f"prefill {rep['prefills']} prompts in {rep['prefill_chunks']} "
+          f"chunks (chunk={args.prefill_chunk}, "
+          f"{rep['interleaved_steps']} interleaved steps, "
+          f"{rep['decode_stall_steps']} stalls); "
           f"ttft mean {rep['ttft_ms_mean']:.0f} ms; "
           f"pool occupancy mean {rep['pool_occupancy_mean']:.2f} "
           f"peak {rep['pool_occupancy_peak']:.2f}; "

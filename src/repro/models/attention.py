@@ -267,6 +267,102 @@ def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     return out, new_cache
 
 
+def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+                            cache: dict, *, window_flag=False,
+                            sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, dict]:
+    """Chunk-of-prompt prefill straight into a *paged* KV pool — the
+    chunked counterpart of :func:`attention` + :func:`attention_decode_paged`
+    (``repro.serve``'s admission path; there is no dense ``[1, T]`` prefill
+    cache anymore).
+
+    x [1, C, d] — one chunk of ONE request's prompt (C is the scheduler's
+    bucketed chunk shape; the tail beyond the chunk's valid tokens is
+    padding).  ``cache`` holds one layer's page pool plus routing state:
+
+      k/v          [n_pages, ps, kvh, dh]  (int8 pages carry
+      k/v_scale    [n_pages, ps, kvh, 1]   per-(pos, head) scales)
+      page_table   [pages] int32 — the PREFILLING slot's page-table row,
+                   sliced to the step's bucketed page budget
+      start        [] int32 — absolute position of the chunk's first token
+      write_lo/hi  [] int32 — absolute position window whose K/V lands in
+                   table pages; everything else (chunk padding, positions
+                   already covered by prefix-shared pages) routes to the
+                   reserved scratch page 0 and is never read back
+
+    The chunk's K/V is scattered into its pages FIRST, then attention reads
+    the whole logical key range [0, pages*ps) through the page table with a
+    start-offset causal mask (``q_offset=start``) — so a query only ever
+    sees keys at positions <= its own, which earlier chunks (or the shared
+    prefix) already wrote.  Masked lanes underflow to exactly 0 in the
+    softmax, so fp pages at the compute dtype reproduce the old full-prompt
+    dense prefill bit for bit (the parity oracle the serve tests pin)."""
+    sq = sq or {}
+    b, C, d = x.shape
+    ps = cache["k"].shape[1]
+    start = cache["start"]
+    page_table = cache["page_table"]                        # [P]
+    n_pages_budget = page_table.shape[0]
+    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
+              smooth=sq.get("attn_qkv@smooth"), fused=sq.get("attn_qkv@fused"))
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"].astype(x.dtype)
+    q, k, v = _split_qkv(cfg, qkv)
+    p_abs = start + jnp.arange(C, dtype=jnp.int32)          # [C] absolute pos
+    positions = jnp.broadcast_to(p_abs[None], (b, C))
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    int8_kv = "k_scale" in cache
+    if int8_kv:
+        from repro.serve.kvcache import quantize_kv
+        qkv_new = quantize_kv(k, v)
+        k_w, v_w = qkv_new["k"], qkv_new["v"]
+        ks_w, vs_w = qkv_new["k_scale"], qkv_new["v_scale"]
+    else:
+        k_w, v_w = k, v
+
+    # scatter the chunk's K/V into the slot's pages.  Positions outside the
+    # write window (chunk tail padding past the prompt, prefix-shared
+    # positions whose pages are mapped read-only) route to scratch page 0,
+    # which is never read back — same trick as the pooled decode's inactive
+    # slots, so the write is one shape-stable scatter with no control flow.
+    writable = (p_abs >= cache["write_lo"]) & (p_abs < cache["write_hi"])
+    logical = jnp.clip(p_abs // ps, 0, n_pages_budget - 1)
+    page_idx = jnp.where(writable, page_table[logical], 0)
+    offset = p_abs % ps
+    ck = cache["k"].at[page_idx, offset].set(k_w[0].astype(cache["k"].dtype))
+    cv = cache["v"].at[page_idx, offset].set(v_w[0].astype(cache["v"].dtype))
+    if int8_kv:
+        cks = cache["k_scale"].at[page_idx, offset].set(ks_w[0])
+        cvs = cache["v_scale"].at[page_idx, offset].set(vs_w[0])
+
+    # gather-read the slot's logical key range through the page table and
+    # attend with the start-position-offset causal mask.  The op sequence
+    # (gather -> sdpa with a [1, 1, sq, sk] additive bias) mirrors the
+    # full-sequence prefill exactly; extra gathered keys past a query's
+    # position are NEG_INF-masked and underflow to exactly 0.
+    kk = ck[page_table].reshape(1, -1, *ck.shape[2:])       # [1, P*ps, kvh, dh]
+    vv = cv[page_table].reshape(1, -1, *cv.shape[2:])
+    if int8_kv:
+        kks = cks[page_table].reshape(1, -1, *cks.shape[2:])
+        vvs = cvs[page_table].reshape(1, -1, *cvs.shape[2:])
+        kk = (kk.astype(jnp.float32) * kks).astype(x.dtype)
+        vv = (vv.astype(jnp.float32) * vvs).astype(x.dtype)
+    else:
+        kk = kk.astype(x.dtype)
+        vv = vv.astype(x.dtype)
+    bias = causal_bias(C, n_pages_budget * ps, cfg.window_size, window_flag,
+                       q_offset=start)
+    o = sdpa(cfg, q, kk, vv, bias)
+    o = o.reshape(b, C, cfg.n_heads * cfg.head_dim)
+    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
+              smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
+    new_cache = {"k": ck, "v": cv}
+    if int8_kv:
+        new_cache.update(k_scale=cks, v_scale=cvs)
+    return out, new_cache
+
+
 def cross_attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
                     memory: jnp.ndarray, sq: Optional[Dict] = None) -> jnp.ndarray:
     """Whisper-style cross attention: queries from decoder x, keys/values

@@ -604,6 +604,76 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
     return logits, new_kv
 
 
+def prefill_chunk_paged(cfg: ModelConfig, params, tokens, kv: dict,
+                        page_table, start, write_lo, write_hi, ctx=None, *,
+                        qparams=None) -> Tuple[jnp.ndarray, dict]:
+    """One chunk of ONE request's prompt prefilled straight into the paged
+    KV pool (``repro.serve``) — the serving engine's only prefill path;
+    there is no dense ``[1, T]`` prefill cache.
+
+    tokens [1, C] (C = the scheduler's bucketed chunk shape; ids past the
+    chunk's valid tokens are padding); ``kv`` = {"k"/"v":
+    [L, n_pages, ps, kvh, dh]} (int8 pages add "k_scale"/"v_scale");
+    ``page_table`` [pages] int32 is the prefilling slot's table row sliced
+    to the bucketed page budget; ``start`` / ``write_lo`` / ``write_hi``
+    are traced int32 scalars (chunk start position and the absolute
+    position window whose K/V is written to pages — see
+    :func:`repro.models.attention.attention_prefill_paged`).
+
+    Returns (logits [1, C, V], updated kv dict).  Because a chunk's queries
+    only attend to positions <= their own — already in pages from earlier
+    chunks or the shared prefix — chunks need NO hidden-state carry between
+    them: the scheduler can interleave one chunk per step with the pooled
+    decode.  Shapes are static per (chunk bucket, page bucket) pair, so the
+    step compiles once per pair, never per prompt length.  Dense/MoE only
+    (the families ``ServeEngine`` serves)."""
+    ctx = ctx or FpCtx()
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged prefill supports dense/moe, not {cfg.family}")
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+
+    flags = _window_flags(cfg)
+    int8_kv = "k_scale" in kv
+    scale_tree = ({"k_scale": kv["k_scale"], "v_scale": kv["v_scale"]}
+                  if int8_kv else {})
+
+    def body(x, xs):
+        lp, flag, sq, c_k, c_v, c_s = xs
+        c_i = {"k": c_k, "v": c_v, "page_table": page_table, "start": start,
+               "write_lo": write_lo, "write_hi": write_hi, **c_s}
+        nctx = _Named(ctx, "")
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, c_i = A.attention_prefill_paged(cfg, lp["attn"], nctx, h, c_i,
+                                           window_flag=flag, sq=sq)
+        if cfg.sandwich_norm:
+            a = apply_norm(cfg, lp["ln1b"], a)
+        x = x + a
+        h = apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            m, _ = E.moe(cfg, lp["moe"], nctx, h, sq=sq)
+        else:
+            m = M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
+        if cfg.sandwich_norm:
+            m = apply_norm(cfg, lp["ln2b"], m)
+        sc_out = ({"k_scale": c_i["k_scale"], "v_scale": c_i["v_scale"]}
+                  if int8_kv else {})
+        return x + m, (c_i["k"], c_i["v"], sc_out)
+
+    xs = (params["layers"], flags, qparams or {}, kv["k"], kv["v"], scale_tree)
+    x, (ks, vs, scs) = jax.lax.scan(body, x, xs)
+    new_kv = {"k": ks, "v": vs}
+    if int8_kv:
+        new_kv.update(scs)
+
+    x = apply_norm(cfg, params["ln_f"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_kv
+
+
 # ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------

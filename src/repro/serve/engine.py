@@ -7,7 +7,10 @@
     pages + per-(position, head) scales by default, fp pages for parity);
   * :class:`repro.serve.scheduler.Scheduler` — FIFO admission with prefix
     sharing (common prompt prefixes map the same refcounted pages,
-    copy-on-write on divergence), preemption, streaming, and ONE jit'd
+    copy-on-write on divergence), CHUNKED paged prefill (each step runs at
+    most ``prefill_chunk`` prompt tokens for at most one request, written
+    straight into pool pages and interleaved with decode — no dense
+    ``[1, T]`` prefill cache), preemption, streaming, and ONE jit'd
     decode step per token for the whole slot pool with a per-slot position
     vector (misaligned sequences batch; there is no align-or-serialize
     fallback).  Decode reads are block-sparse: each step gathers only the
@@ -23,12 +26,10 @@ from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.context import QuantCtx, as_ctx
 from repro.data import tokenizer as tok
 from repro.models import transformer as T
-from repro.models.attention import init_cache
 from repro.models.common import ModelConfig
 from repro.quantize import QuantArtifact
 from repro.serve.metrics import ServeMetrics
@@ -44,6 +45,13 @@ class Request:
     done: bool = False
     # per-request streaming: called with each token the step it is sampled
     stream: Optional[Callable[[int], None]] = None
+    # stamped by the scheduler when the first token is sampled (wall clock
+    # since arrival / scheduler steps since arrival / OTHER requests'
+    # prompt tokens prefilled in between — the deterministic face of TTFT
+    # under prefill contention) — lets load generators split TTFT by class
+    ttft_s: Optional[float] = None
+    ttft_steps: Optional[int] = None
+    ttft_prefill_tokens: Optional[int] = None
 
 
 class ServeEngine:
@@ -68,15 +76,27 @@ class ServeEngine:
     ``cache_dtype`` matches).  The default (``kv_mode=None``) follows the
     weight path: int8 pages for quantized serving, fp pages for plain fp
     params — an unquantized model never silently gets a lossy cache.
-    ``cache_dtype`` (default bf16) also sets the prefill cache dtype — fp
-    serving no longer pays a 2x fp32 cache tax.
+    ``cache_dtype`` (default bf16) sets the fp-page dtype — fp serving no
+    longer pays a 2x fp32 cache tax.
+
+    Prefill is **chunked and paged**: prompts are admitted into pool pages
+    and prefilled ``prefill_chunk`` tokens at a time
+    (:func:`repro.models.transformer.prefill_chunk_paged`), each chunk
+    writing its K/V straight into the slot's pages — there is no dense
+    ``[1, T]`` prefill cache, and the scheduler interleaves one chunk per
+    step with the pooled decode so a long-prompt flood never stalls live
+    decode slots for more than one chunk's worth of compute.  Chunk shapes
+    bucket to powers of two like decode page budgets, so the chunked
+    prefill compiles once per (chunk-bucket, page-bucket) pair
+    (``prefill_traces`` / ``prefill_buckets`` mirror ``decode_traces`` /
+    ``decode_buckets``).
     """
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  s_max: int = 512, quant=None, greedy: bool = True, *,
                  kv_mode: Optional[str] = None, page_size: int = 16,
                  n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, prefill_chunk: int = 32):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
         if isinstance(params, QuantArtifact):
             if quant is not None:
@@ -117,11 +137,16 @@ class ServeEngine:
 
         if kv_mode is None:
             kv_mode = "int8" if isinstance(self.ctx, QuantCtx) else "fp"
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = int(prefill_chunk)
         self.pool = PagePool(cfg, max_batch, s_max, page_size=page_size,
                              n_pages=n_pages, mode=kv_mode, dtype=cache_dtype)
         self.metrics = ServeMetrics()    # last generate() run's metrics
         self.decode_traces = 0           # pooled-step (re)trace counter
         self.decode_buckets = set()      # page-budget buckets seen (lifetime)
+        self.prefill_traces = 0          # chunked-prefill (re)trace counter
+        self.prefill_buckets = set()     # (chunk, page) bucket pairs (lifetime)
 
         def decode(params, tokens, kv, page_table, pos):
             self.decode_traces += 1      # python side effect: trace time only
@@ -136,22 +161,26 @@ class ServeEngine:
         # retraces once per bucket, never per sequence length
         self._decode = jax.jit(decode, donate_argnums=(2,))
 
+        def prefill(params, tokens, kv, page_table, start, write_lo, write_hi):
+            self.prefill_traces += 1     # python side effect: trace time only
+            logits, new_kv = T.prefill_chunk_paged(
+                cfg, params, tokens, kv, page_table, start, write_lo,
+                write_hi, self.ctx, qparams=qparams)
+            nxt = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1)
+            return nxt.astype(jnp.int32), new_kv
+
+        # chunk shapes are bucketed like decode page budgets: the chunked
+        # prefill compiles once per (chunk-bucket, page-bucket) pair —
+        # start/write_lo/write_hi ride as traced scalars, never shapes
+        self._prefill_step = jax.jit(prefill, donate_argnums=(2,))
+
     # -- scheduler plumbing ---------------------------------------------------
 
-    def _prefill_one(self, prompt_ids: np.ndarray):
-        """Prefill a single sequence; returns (next_token, cache)."""
-        tokens = jnp.asarray(prompt_ids)[None]
-        s = tokens.shape[1]
-        cache = init_cache(self.cfg, 1, s, dtype=self.cache_dtype)
-        out = T.forward(self.cfg, self.params, tokens, self.ctx,
-                        scan=self.cfg.family != "hybrid", cache=cache,
-                        qparams=self.qparams)
-        nxt = int(jnp.argmax(out["logits"][0, -1, : self.cfg.vocab_size]))
-        return nxt, out["cache"]
-
-    def _prefill(self, prompt_ids: np.ndarray):
-        nxt, cache = self._prefill_one(prompt_ids)
-        return nxt, cache["k"][:, 0], cache["v"][:, 0]
+    def _prefill_pool(self, tokens, kv, page_table, start, write_lo, write_hi):
+        self.prefill_buckets.add((int(tokens.shape[1]),
+                                  int(page_table.shape[0])))
+        return self._prefill_step(self.params, tokens, kv, page_table,
+                                  start, write_lo, write_hi)
 
     def _decode_pool(self, tokens, kv, page_table, pos):
         self.decode_buckets.add(int(page_table.shape[1]))
@@ -161,8 +190,9 @@ class ServeEngine:
 
     def scheduler(self) -> Scheduler:
         """A fresh scheduler over this engine's (persistent) page pool."""
-        return Scheduler(self.pool, self._prefill, self._decode_pool,
-                         prefix_sharing=self.prefix_sharing)
+        return Scheduler(self.pool, self._prefill_pool, self._decode_pool,
+                         prefix_sharing=self.prefix_sharing,
+                         prefill_chunk=self.prefill_chunk)
 
     def generate(self, requests: List[Request],
                  arrivals: Optional[Sequence[int]] = None) -> List[Request]:

@@ -25,11 +25,16 @@ class ServeMetrics:
     tokens_out: int = 0          # generated tokens (prefill-sampled + decode)
     decode_steps: int = 0        # pooled decode step invocations
     decode_slot_steps: int = 0   # sum of active slots over decode steps
-    prefills: int = 0
+    prefills: int = 0            # prompts fully prefilled (chunked)
+    prefill_chunks: int = 0      # chunked-prefill step invocations
+    prefill_chunk_tokens: int = 0  # valid prompt tokens prefilled via chunks
+    interleaved_steps: int = 0   # steps running a prefill chunk AND decode
+    decode_stall_steps: int = 0  # steps where live decode slots got no decode
     preemptions: int = 0
     submitted: int = 0
     completed: int = 0
     ttft_s: List[float] = dataclasses.field(default_factory=list)
+    ttft_steps: List[int] = dataclasses.field(default_factory=list)
     occupancy: List[float] = dataclasses.field(default_factory=list)
     fragmentation: List[float] = dataclasses.field(default_factory=list)
     cache_bytes: int = 0
@@ -58,9 +63,6 @@ class ServeMetrics:
         if self._t0 is None:
             return 0.0
         return (self._t1 or time.perf_counter()) - self._t0
-
-    def record_ttft(self, submit_t: float) -> None:
-        self.ttft_s.append(time.perf_counter() - submit_t)
 
     def record_read(self, pool, bucket: int) -> None:
         """Account one pooled decode step's KV page reads: ``bucket`` pages
@@ -96,11 +98,19 @@ class ServeMetrics:
             "decode_batch_mean": (self.decode_slot_steps / self.decode_steps
                                   if self.decode_steps else 0.0),
             "prefills": self.prefills,
+            "prefill_chunks": self.prefill_chunks,
+            "prefill_chunk_tokens": self.prefill_chunk_tokens,
+            "prefill_chunks_per_prompt": (self.prefill_chunks / self.prefills
+                                          if self.prefills else 0.0),
+            "interleaved_steps": self.interleaved_steps,
+            "decode_stall_steps": self.decode_stall_steps,
             "preemptions": self.preemptions,
             "submitted": self.submitted,
             "completed": self.completed,
             "ttft_ms_mean": 1e3 * self._mean(self.ttft_s),
             "ttft_ms_max": 1e3 * max(self.ttft_s) if self.ttft_s else 0.0,
+            "ttft_steps_mean": self._mean(self.ttft_steps),
+            "ttft_steps_max": max(self.ttft_steps) if self.ttft_steps else 0,
             "pool_occupancy_mean": self._mean(self.occupancy),
             "pool_occupancy_peak": max(self.occupancy) if self.occupancy else 0.0,
             "fragmentation_mean": self._mean(self.fragmentation),

@@ -55,6 +55,17 @@ from repro.models.attention import n_attn_layers
 from repro.serve.kvcache import cache_bytes, quantize_kv
 
 
+def bucket_pow2(n: int, cap: int) -> int:
+    """Round ``n`` up to the next power of two, clamped to [1, cap] — the
+    shared bucketing rule for decode page budgets AND prefill chunk sizes,
+    so both compile one executable per bucket, never per length."""
+    n = max(1, min(n, cap))
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
 class PagePool:
     """Fixed-size page pool + per-slot page tables + free-list alloc/free."""
 
@@ -238,11 +249,7 @@ class PagePool:
         """Round a page budget up to the next power of two (clamped to
         ``pages_per_slot``) so the pooled decode compiles one executable per
         bucket instead of one per sequence length."""
-        n_needed = max(1, min(n_needed, self.pages_per_slot))
-        b = 1
-        while b < n_needed:
-            b *= 2
-        return min(b, self.pages_per_slot)
+        return bucket_pow2(n_needed, self.pages_per_slot)
 
     def page_read_bytes(self) -> int:
         """Bytes one page costs to read across ALL attention layers (K + V

@@ -2,37 +2,58 @@
 
 The scheduler owns the serving control loop the engine used to inline:
 
-  * **FIFO admission** — queued requests prefill into free slots as soon as
-    pages are available (arrival steps optionally gate admission for load
-    generators).  Admission detects a shared prompt prefix with a live
-    slot and maps the covered pages instead of allocating fresh ones
-    (prefix sharing — lossless: causal K/V at position p depends only on
-    tokens [0, p]);
+  * **FIFO admission** — queued requests claim free slots as soon as pages
+    are available (arrival steps optionally gate admission for load
+    generators).  Admission allocates the prompt's pages and marks the
+    slot PREFILLING; it never runs prompt compute itself.  Admission
+    detects a shared prompt prefix with a live slot and maps the covered
+    pages instead of allocating fresh ones (prefix sharing — lossless:
+    causal K/V at position p depends only on tokens [0, p]); the chunked
+    prefill then *skips both recompute and rewrite* of the shared
+    positions — it starts at the first uncovered position and attends over
+    the mapped pages;
+  * **chunked paged prefill, interleaved with decode** — each step runs at
+    most ``prefill_chunk`` prompt tokens for at most ONE prefilling slot
+    (:func:`repro.models.transformer.prefill_chunk_paged` writes the
+    chunk's K/V straight into pool pages; there is no dense ``[1, T]``
+    prefill cache) *alongside* the pooled decode step, so a long-prompt
+    flood never stalls live decode slots for more than one chunk's worth
+    of compute.  Among prefilling slots, the one with the fewest remaining
+    prompt tokens goes first (shortest-remaining-first), so short requests
+    keep a low TTFT under a long-prompt flood instead of queueing behind
+    every long prompt's full prefill.  Chunk token counts bucket to powers
+    of two (like decode page budgets), so the chunked prefill compiles
+    once per (chunk-bucket, page-bucket) pair, never per prompt length;
   * **one jit'd decode per step for the WHOLE pool** — slot positions ride
     a per-slot vector into :func:`repro.models.transformer.decode_step_paged`,
     so misaligned sequences batch instead of falling back to per-slot
     decode.  There is no alignment fast path to fall off of: every step is
-    exactly one traced call regardless of slot positions;
+    exactly one traced call regardless of slot positions.  Mid-prefill
+    slots sit the decode out — their page-table rows are zeroed for the
+    step, routing the (shape-stable) pool-wide write to the reserved
+    scratch page;
   * **block-sparse page budget** — each step passes only the page-table
-    columns the longest live sequence needs (its live-page count from the
-    pool, bucketed to powers of two so there is one compiled executable
-    per bucket, not per length): a 16-token sequence in a 2048-capacity
-    slot reads 1 page of K/V, not 128;
+    columns the longest live *decoding* sequence needs (its live-page
+    count from the pool, bucketed to powers of two so there is one
+    compiled executable per bucket, not per length): a 16-token sequence
+    in a 2048-capacity slot reads 1 page of K/V, not 128;
   * **copy-on-write** — before a decode token lands in a prefix-shared
     page the pool copies it to a private page, so the sibling slot's
     history is never corrupted;
   * **preemption** — when a growing sequence needs a page and the pool is
-    exhausted, the longest live sequence is evicted (pages freed, request
-    requeued at the front) and later resumed by re-prefilling prompt +
-    generated tokens.  With fp pages at the prefill cache dtype the replay
-    reproduces the evicted cache bit for bit; with int8 pages it is
-    approximate — the replaying prefill attends over in-flight
-    full-precision K/V where the evicted decode attended over dequantized
-    int8 pages, so post-resume hidden states can drift within quantization
-    noise;
+    exhausted, the live sequence holding the longest token range is
+    evicted (pages freed, request requeued at the front) and later resumed
+    by re-prefilling prompt + generated tokens — in chunks, so the replay
+    resumes at a chunk boundary and never stalls the pool either.  With fp
+    pages at the compute dtype the replay reproduces the evicted cache bit
+    for bit; with int8 pages it is approximate (within quantization
+    noise).  A slot preempted mid-prefill restarts its prefill from the
+    first chunk on resume;
   * **streaming** — each emitted token is pushed through the request's
     ``stream`` callback the step it is sampled;
-  * **metrics** — tokens/s, TTFT, pool occupancy, fragmentation, decode KV
+  * **metrics** — tokens/s, TTFT (wall clock and step clock, also stamped
+    onto each request), prefill chunk counts, prefill/decode interleaving
+    and decode-stall counters, pool occupancy, fragmentation, decode KV
     bytes read (block-sparse vs the dense capacity gather) and sharing
     stats via :class:`repro.serve.metrics.ServeMetrics`.
 """
@@ -40,6 +61,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Callable, List, Optional, Sequence
 
@@ -48,42 +70,62 @@ import numpy as np
 
 from repro.data import tokenizer as tok
 from repro.serve.metrics import ServeMetrics
-from repro.serve.pool import PagePool
+from repro.serve.pool import PagePool, bucket_pow2
+
+
+def bucket_chunk(n: int, cap: int) -> int:
+    """Round a chunk's token count up to the next power of two, clamped to
+    ``cap`` (the configured ``prefill_chunk``) — one compiled prefill
+    executable per chunk bucket, never per prompt length.  Same rule as
+    the decode page buckets (:func:`repro.serve.pool.bucket_pow2`)."""
+    return bucket_pow2(n, cap)
 
 
 @dataclasses.dataclass
 class _Slot:
     req: object                 # repro.serve.engine.Request
     submit_t: float
-    ids: np.ndarray             # the token ids this slot prefilled with
+    ids: np.ndarray             # the token ids this slot prefills with
+    arrive_step: int            # step clock when the request arrived
+    seq: int                    # admission order (prefill SRF tie-break)
+    prefilling: bool = True     # still running chunked prefill
+    pre_pos: int = 0            # next prompt position to compute
+    pre_start: int = 0          # where this slot's chunked compute began
+    write_from: int = 0         # first position NOT covered by shared pages
+    tokens_at_arrival: int = 0  # metrics.prefill_chunk_tokens at arrival
 
 
 class Scheduler:
     """Drives a request set to completion against one :class:`PagePool`.
 
-    ``prefill_fn(ids) -> (next_token, k, v)`` runs a single sequence's
-    prefill and returns the sampled next token plus the dense per-layer K/V
-    slices ``[L, s, kvh, dh]`` to scatter into pages.  ``decode_fn(tokens,
-    kv, page_table, pos) -> (next_tokens, new_kv)`` is the jit'd pool-wide
-    step (the engine binds params/ctx/qparams); ``page_table`` arrives
-    sliced to the step's page budget — the kernel side reads the budget off
-    the table's shape."""
+    ``prefill_fn(tokens, kv, page_table, start, write_lo, write_hi) ->
+    (next_tokens [1, C], new_kv)`` runs one bucketed chunk of one slot's
+    prompt against the paged pool (the engine binds params/ctx/qparams and
+    jits per bucket pair).  ``decode_fn(tokens, kv, page_table, pos) ->
+    (next_tokens, new_kv)`` is the jit'd pool-wide step; ``page_table``
+    arrives sliced to the step's page budget — the kernel side reads the
+    budget off the table's shape."""
 
     def __init__(self, pool: PagePool,
                  prefill_fn: Callable, decode_fn: Callable, *,
                  eos: int = tok.EOS,
                  metrics: Optional[ServeMetrics] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True,
+                 prefill_chunk: int = 32):
         self.pool = pool
         self.prefill = prefill_fn
         self.decode = decode_fn
         self.eos = eos
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.prefix_sharing = prefix_sharing
+        if prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        self.prefill_chunk = int(prefill_chunk)
         n = pool.n_slots
         self.slots: List[Optional[_Slot]] = [None] * n
-        self.pos = np.zeros(n, np.int32)        # per-slot live length
+        self.pos = np.zeros(n, np.int32)        # per-slot live decode length
         self.last_tok = np.zeros(n, np.int32)
+        self._admit_seq = 0
 
     # -- public --------------------------------------------------------------
 
@@ -108,7 +150,7 @@ class Scheduler:
                     f"prompt of {need - 1} tokens exceeds slot capacity "
                     f"{self.pool.capacity - 1} (raise s_max)")
         queue = collections.deque(
-            [req, int(arr), None] for req, arr in
+            [req, int(arr), None, 0, 0] for req, arr in
             sorted(zip(requests, arrivals), key=lambda p: p[1]))
         m.submitted += len(requests)
         step_clock = 0
@@ -137,38 +179,71 @@ class Scheduler:
             for entry in queue:
                 if entry[2] is None and entry[1] <= step_clock:
                     entry[2] = now = now or time.perf_counter()
+                    entry[3] = step_clock
+                    entry[4] = m.prefill_chunk_tokens
             self._admit(queue, step_clock)
             if not any(self.slots):
                 if queue:           # everything pending is a future arrival
                     step_clock += 1
                     continue
                 break
+
+            # at most ONE prefilling slot advances by at most one chunk —
+            # the per-step prompt-token budget that keeps decode flowing
+            # under a long-prompt flood
+            did_prefill = self._prefill_chunk_step(step_clock)
+            # back every live decode slot's next write position (may
+            # preempt on pool exhaustion)
             self._ensure_pages(queue)
-            active = [i for i, s in enumerate(self.slots) if s is not None]
-            if not active:
-                continue            # capacity finishes / self-preemption
+            active = [i for i, s in enumerate(self.slots)
+                      if s is not None and not s.prefilling]
+            decode_ran = False
+            if active:
+                # block-sparse read budget: the longest live decoding
+                # sequence's backed page count, bucketed so each bucket
+                # compiles exactly once
+                counts = self.pool.live_page_counts()
+                bucket = self.pool.bucket_pages(max(int(counts[i])
+                                                    for i in active))
+                prefilling = [i for i, s in enumerate(self.slots)
+                              if s is not None and s.prefilling]
+                if prefilling:
+                    # mid-prefill slots sit decode out: a zeroed table row
+                    # routes the pool-wide write to scratch page 0 and its
+                    # (discarded) reads to zeros — no shape change, no
+                    # per-slot control flow
+                    table = self.pool.page_table[:, :bucket].copy()
+                    table[prefilling] = 0
+                    table = jnp.asarray(table)
+                else:
+                    # steady state: reuse the pool's cached device table
+                    table = self.pool.table()[:, :bucket]
 
-            # block-sparse read budget: the longest live sequence's backed
-            # page count, bucketed so each bucket compiles exactly once
-            counts = self.pool.live_page_counts()
-            bucket = self.pool.bucket_pages(max(int(counts[i])
-                                                for i in active))
-            table = self.pool.table()[:, :bucket]
-
-            # ONE jit'd decode for the whole pool, per-slot positions inside
-            nxt, new_kv = self.decode(
-                jnp.asarray(self.last_tok)[:, None], self.pool.state(),
-                table, jnp.asarray(self.pos))
-            self.pool.adopt(new_kv)
-            outs = np.asarray(nxt)
-            m.decode_steps += 1
-            m.decode_slot_steps += len(active)
-            m.record_read(self.pool, bucket)
+                # ONE jit'd decode for the whole pool, per-slot positions
+                # inside
+                nxt, new_kv = self.decode(
+                    jnp.asarray(self.last_tok)[:, None], self.pool.state(),
+                    table, jnp.asarray(self.pos))
+                self.pool.adopt(new_kv)
+                decode_ran = True
+                outs = np.asarray(nxt)
+                m.decode_steps += 1
+                m.decode_slot_steps += len(active)
+                m.record_read(self.pool, bucket)
+                if did_prefill:
+                    m.interleaved_steps += 1
+                for i in active:
+                    self.pos[i] += 1
+                    self._post_token(i, int(outs[i]))
+            if active and not decode_ran:
+                # falsifiable stall gate: trips if a future change makes
+                # the pooled decode conditional (e.g. prefill-exclusive
+                # steps) while live decode slots wait — serve_bench --smoke
+                # asserts this stays 0
+                m.decode_stall_steps += 1
             step_clock += 1
-            for i in active:
-                self.pos[i] += 1
-                self._post_token(i, int(outs[i]))
-            live = {i: int(self.pos[i]) for i, s in enumerate(self.slots) if s}
+            live = {i: (int(self.pos[i]) if not s.prefilling else s.pre_pos)
+                    for i, s in enumerate(self.slots) if s}
             m.sample_pool(self.pool.stats(live))
 
     # -- admission -----------------------------------------------------------
@@ -184,15 +259,22 @@ class Scheduler:
 
     def _shared_prefix(self, ids: np.ndarray):
         """Best prefix-share candidate among live slots: (src_slot,
-        shared_pages, write_from) or (None, 0, 0).
+        shared_pages, write_from, pending).
 
         Whole pages covered by the common prefix are always shareable.  The
         partial tail page is shareable only when the new prompt lies
         entirely inside the common prefix (``c == len(ids)``): the slot
         then writes nothing at prefill, and its first decode write into the
-        shared tail triggers copy-on-write."""
+        shared tail triggers copy-on-write.
+
+        A mid-prefill source has only written positions < ``pre_pos``;
+        pages past that are allocated but hold no K/V yet.  Rather than
+        admit the new request unshared (recomputing a prefix that is being
+        written RIGHT NOW), admission reports ``pending=True`` and waits —
+        the source advances one chunk per step, so within a few steps the
+        prefix is shareable and the sharer skips its whole recompute."""
         if not self.prefix_sharing:
-            return None, 0, 0
+            return None, 0, 0, False
         ps = self.pool.page_size
         best, best_c = None, 0
         for i, st in enumerate(self.slots):
@@ -207,19 +289,25 @@ class Scheduler:
         partial = best_c == len(ids) and best_c % ps != 0
         n_share = n_full + (1 if partial else 0)
         if best is None or n_share == 0:
-            return None, 0, 0
+            return None, 0, 0, False
+        st = self.slots[best]
+        written = st.pre_pos if st.prefilling else len(st.ids)
+        # the sharer's first chunk reads every shared position, so the
+        # source must have written through the shared range
+        if written < (best_c if partial else n_full * ps):
+            return None, 0, 0, True
         # shared pages must actually be backed in the source slot
         if not np.all(self.pool.page_table[best, :n_share] > 0):
-            return None, 0, 0
+            return None, 0, 0, False
         write_from = len(ids) if partial else n_full * ps
-        return best, n_share, write_from
+        return best, n_share, write_from, False
 
     def _admit(self, queue, step_clock: int) -> None:
         while queue and queue[0][1] <= step_clock:
             free = [i for i, s in enumerate(self.slots) if s is None]
             if not free:
                 return
-            req, _, submit_t = queue[0]
+            req, _, submit_t, arrive_step, tokens_at_arrival = queue[0]
             ids = self._request_ids(req)
             if len(ids) + 1 > self.pool.capacity:
                 if req.out_tokens:      # resumed at capacity: done, truncated
@@ -231,7 +319,9 @@ class Scheduler:
                     f"prompt of {len(ids)} tokens exceeds slot capacity "
                     f"{self.pool.capacity - 1} (raise s_max)")
             slot = free[0]
-            src, n_share, write_from = self._shared_prefix(ids)
+            src, n_share, write_from, pending = self._shared_prefix(ids)
+            if pending:
+                return              # FIFO: wait for the source's chunks
             if not self.pool.admit(slot, len(ids), share_from=src,
                                    shared_pages=n_share):
                 if not any(self.slots):
@@ -241,30 +331,119 @@ class Scheduler:
                         f"pages, {self.pool.pages_free} free")
                 return                  # FIFO: wait for pages, don't skip
             queue.popleft()
-            nxt, k, v = self.prefill(ids)
-            self.pool.write_prefill(slot, k, v, start_pos=write_from)
-            self.metrics.prefills += 1
+            st = _Slot(req, submit_t, ids, arrive_step, self._admit_seq,
+                       tokens_at_arrival=tokens_at_arrival)
+            self._admit_seq += 1
+            st.write_from = write_from
+            fresh = not req.out_tokens
+            # shared positions skip recompute entirely — their K/V is
+            # already in the mapped pages.  A fresh prompt that lies fully
+            # inside a shared prefix still runs one 1-token chunk at its
+            # last position to sample the first output token; a resumed one
+            # needs no compute at all.
+            if write_from < len(ids):
+                st.pre_pos = write_from
+            elif fresh:
+                st.pre_pos = len(ids) - 1
+            else:
+                st.pre_pos = len(ids)
+            st.pre_start = st.pre_pos
+            self.slots[slot] = st
+            self.pos[slot] = 0
+            self.last_tok[slot] = 0
             if n_share:
                 self.metrics.prefix_hits += 1
                 self.metrics.shared_pages_mapped += n_share
-            fresh = not req.out_tokens
-            self.slots[slot] = _Slot(req, submit_t, ids)
-            self.pos[slot] = len(ids)
-            if fresh:
-                self.metrics.record_ttft(submit_t)
-                self._post_token(slot, int(nxt))
-                if self.slots[slot] is None:
-                    continue            # one-token request: done at prefill
-            self.last_tok[slot] = req.out_tokens[-1]
+            if st.pre_pos >= len(ids):          # resumed, fully shared
+                self._activate(slot, None, step_clock)
+
+    # -- chunked prefill -----------------------------------------------------
+
+    def _prefill_chunk_step(self, step_clock: int) -> bool:
+        """Advance ONE prefilling slot by one bucketed chunk (the per-step
+        prompt-token budget).  Shortest-remaining-first among prefilling
+        slots, admission order as the tie-break.  Returns True if a chunk
+        ran."""
+        cands = [i for i, s in enumerate(self.slots)
+                 if s is not None and s.prefilling]
+        if not cands:
+            return False
+        slot = min(cands, key=lambda j: (len(self.slots[j].ids)
+                                         - self.slots[j].pre_pos,
+                                         self.slots[j].seq))
+        st = self.slots[slot]
+        ids, done = st.ids, st.pre_pos
+        n = min(self.prefill_chunk, len(ids) - done)
+        cb = bucket_chunk(n, self.prefill_chunk)
+        toks = np.zeros((1, cb), np.int32)
+        toks[0, :n] = ids[done:done + n]
+        # page budget: every page a chunk query can read (positions
+        # [0, done + cb)), bucketed like the decode read budget
+        ps = self.pool.page_size
+        pb = self.pool.bucket_pages(math.ceil((done + cb) / ps))
+        tab = self.pool.page_table[slot, :pb]
+        # the write window never touches prefix-shared pages (they are
+        # mapped read-only) nor the chunk's padding tail
+        w_lo, w_hi = max(done, st.write_from), min(done + n, len(ids))
+        nxt, new_kv = self.prefill(
+            jnp.asarray(toks), self.pool.state(), jnp.asarray(tab),
+            jnp.asarray(done, jnp.int32), jnp.asarray(w_lo, jnp.int32),
+            jnp.asarray(w_hi, jnp.int32))
+        self.pool.adopt(new_kv)
+        m = self.metrics
+        m.prefill_chunks += 1
+        m.prefill_chunk_tokens += n
+        st.pre_pos = done + n
+        if st.pre_pos >= len(ids):
+            self._activate(slot, int(np.asarray(nxt)[0, n - 1]), step_clock)
+        return True
+
+    def _activate(self, slot: int, sampled: Optional[int],
+                  step_clock: int) -> None:
+        """Prefill complete: the slot joins the pooled decode.  ``sampled``
+        is the token argmaxed at the prompt's last position (None for a
+        resumed request — its next decode input is the last generated
+        token, so nothing is sampled at prefill)."""
+        st = self.slots[slot]
+        st.prefilling = False
+        self.pos[slot] = len(st.ids)
+        m = self.metrics
+        m.prefills += 1
+        fresh = not st.req.out_tokens
+        if fresh:
+            ttft = time.perf_counter() - st.submit_t
+            m.ttft_s.append(ttft)
+            m.ttft_steps.append(step_clock - st.arrive_step)
+            # other requests' prompt tokens prefilled between this
+            # request's arrival and its first token — the deterministic
+            # face of TTFT under prefill contention (chunking bounds it by
+            # one chunk per step; a whole-prompt prefill ahead of a short
+            # request blows it up by the whole prompt)
+            waited = (m.prefill_chunk_tokens - st.tokens_at_arrival
+                      - (len(st.ids) - st.pre_start))
+            # stamp the request so load generators can split TTFT by class
+            for name, val in (("ttft_s", ttft),
+                              ("ttft_steps", step_clock - st.arrive_step),
+                              ("ttft_prefill_tokens", waited)):
+                try:
+                    setattr(st.req, name, val)
+                except AttributeError:
+                    pass
+            self._post_token(slot, int(sampled))
+            if self.slots[slot] is None:
+                return                  # one-token request: done at prefill
+        self.last_tok[slot] = st.req.out_tokens[-1]
 
     # -- paging / preemption --------------------------------------------------
 
     def _ensure_pages(self, queue) -> None:
-        """Back every live slot's next write position with a PRIVATE page
-        (allocating, or copy-on-write when the page is prefix-shared); on
-        exhaustion, preempt the longest live sequence and retry."""
+        """Back every live decode slot's next write position with a PRIVATE
+        page (allocating, or copy-on-write when the page is prefix-shared);
+        on exhaustion, preempt the live sequence holding the longest token
+        range and retry.  Mid-prefill slots need no decode-write page —
+        admission preallocated their prompt's pages."""
         for i in range(len(self.slots)):
-            if self.slots[i] is None:
+            if self.slots[i] is None or self.slots[i].prefilling:
                 continue
             if self.pos[i] >= self.pool.capacity:
                 self._finish(i)         # slot full: out of cache headroom
@@ -273,8 +452,15 @@ class Scheduler:
             while self.slots[i] is not None \
                     and not self.pool.ensure_writable(i, page_idx):
                 live = [j for j, s in enumerate(self.slots) if s is not None]
-                victim = max(live, key=lambda j: int(self.pos[j]))
+                victim = max(live, key=self._held_tokens)
                 self._preempt(victim, queue)
+
+    def _held_tokens(self, slot: int) -> int:
+        """Preemption-victim key: the token range a slot's pages cover (a
+        mid-prefill slot holds pages for its WHOLE prompt, so eviction
+        frees them all)."""
+        st = self.slots[slot]
+        return len(st.ids) if st.prefilling else int(self.pos[slot])
 
     def _preempt(self, slot: int, queue) -> None:
         st = self.slots[slot]
@@ -282,7 +468,14 @@ class Scheduler:
         self.slots[slot] = None
         self.pos[slot] = 0
         self.metrics.preemptions += 1
-        queue.appendleft([st.req, 0, st.submit_t])
+        # replay resumes at a chunk boundary: a decode slot re-prefills
+        # prompt + generated tokens in chunks; a mid-prefill slot restarts
+        # its prefill from the first chunk.  The chunk tokens this slot's
+        # own first attempt burned are credited forward so its eventual
+        # ttft_prefill_tokens stamp still counts only FOREIGN prefill.
+        queue.appendleft([st.req, 0, st.submit_t, st.arrive_step,
+                          st.tokens_at_arrival
+                          + (st.pre_pos - st.pre_start)])
 
     # -- token bookkeeping ----------------------------------------------------
 

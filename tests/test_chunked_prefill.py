@@ -1,0 +1,248 @@
+"""Chunked paged prefill + prefill/decode interleaving.
+
+Acceptance criteria covered here:
+  * chunked prefill on fp pages at fp32 is BIT-EXACT against the old
+    full-prompt dense prefill (the parity oracle), for chunk sizes below,
+    at, and above the page size, with and without a preallocated-page
+    budget slice;
+  * the engine serves end-to-end through chunks only — there is no dense
+    ``[1, T]`` prefill cache path left to fall back to;
+  * compiled prefill steps == one per (chunk-bucket, page-bucket) pair at
+    most, never per prompt length, and a second run over the same length
+    range adds no traces;
+  * prefill chunks interleave with pooled decode steps (live decode slots
+    never stall while a long prompt prefills), and the per-request
+    ``ttft_prefill_tokens`` stamp bounds a short request's wait by one
+    chunk per step of its TTFT window;
+  * prefix sharing still skips re-prefill: a fully-shared prompt runs ONE
+    1-token chunk, and admission WAITS (pending) rather than recompute a
+    prefix its source is writing right now;
+  * preemption mid-prefill releases the pages and replays from the first
+    chunk with bit-identical results on fp pages.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import tokenizer as tok
+from repro.models import transformer as T
+from repro.models.attention import init_cache
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import bucket_chunk
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("gpt2-small", reduced=True).replace(
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=256,
+        vocab_size=120)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _dense_reference(cfg, params, prompt, n_new):
+    """The old engine path: full-prompt dense prefill + dense decode."""
+    ids = tok.encode(prompt)
+    cache = init_cache(cfg, 1, len(ids) + n_new, dtype=jnp.float32)
+    out = T.forward(cfg, params, jnp.asarray(ids)[None], cache=cache)
+    toks = [int(jnp.argmax(out["logits"][0, -1, : cfg.vocab_size]))]
+    cache = out["cache"]
+    for _ in range(n_new - 1):
+        lg, cache = T.decode_step(cfg, params, jnp.asarray([[toks[-1]]]),
+                                  cache)
+        toks.append(int(jnp.argmax(lg[0, -1, : cfg.vocab_size])))
+    return toks
+
+
+# ---------------------------------------------------------------------------
+# Bit-exactness vs the full-prompt dense prefill (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("prefill_chunk", [2, 8, 16, 64])
+def test_chunked_prefill_bit_exact_vs_dense(small_model, prefill_chunk):
+    """fp pages at fp32: every chunk size — below, at, and above the page
+    size — reproduces the old full-prompt prefill + dense decode bit for
+    bit (sampled tokens are argmaxes of bit-identical logits)."""
+    cfg, params = small_model
+    for prompt in ["abcdefghijklmnopqr", "xy", "a" * 31]:
+        ref = _dense_reference(cfg, params, prompt, 6)
+        eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                          kv_mode="fp", cache_dtype=jnp.float32,
+                          prefill_chunk=prefill_chunk)
+        req = Request(prompt, max_new_tokens=6)
+        eng.generate([req])
+        assert req.out_tokens == ref, (prefill_chunk, prompt)
+
+
+def test_no_dense_prefill_path_left(small_model):
+    """The dense [1, T] prefill cache is gone: the engine exposes only the
+    chunked paged prefill, and a full generate() allocates no dense cache
+    (every prompt token lands in pool pages via chunks)."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                      prefill_chunk=4)
+    assert not hasattr(eng, "_prefill_one") and not hasattr(eng, "_prefill")
+    req = Request("abcdefghijk", max_new_tokens=4)
+    eng.generate([req])
+    assert req.done
+    m = eng.metrics
+    # 12 prompt ids at chunk 4 -> 3 chunks, all counted
+    assert m.prefill_chunks == 3
+    assert m.prefill_chunk_tokens == 12
+    assert m.prefills == 1
+
+
+# ---------------------------------------------------------------------------
+# Bucketed compiles (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_prefill_compiles_per_bucket_pair_not_per_length(small_model):
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=128, page_size=8,
+                      kv_mode="fp", cache_dtype=jnp.float32, prefill_chunk=8)
+    # prompt lengths spanning several chunk and page buckets
+    for n in (2, 3, 5, 9, 13, 21, 40, 57):
+        eng.generate([Request("a" * n, max_new_tokens=2)])
+    # one compiled executable per (chunk-bucket, page-bucket) pair seen --
+    # and at most the bucket-product, never one per prompt length
+    assert eng.prefill_traces == len(eng.prefill_buckets)
+    chunk_buckets = {c for c, _ in eng.prefill_buckets}
+    page_buckets = {p for _, p in eng.prefill_buckets}
+    assert eng.prefill_traces <= len(chunk_buckets) * len(page_buckets)
+    assert chunk_buckets <= {1, 2, 4, 8}
+    # a second pass over the same lengths adds NO traces
+    before = eng.prefill_traces
+    for n in (2, 3, 5, 9, 13, 21, 40, 57):
+        eng.generate([Request("b" * n, max_new_tokens=2)])
+    assert eng.prefill_traces == before
+
+
+def test_bucket_chunk_rounding():
+    assert [bucket_chunk(n, 8) for n in (1, 2, 3, 5, 8, 9, 100)] == \
+        [1, 2, 4, 8, 8, 8, 8]
+    assert bucket_chunk(3, 2) == 2
+
+
+# ---------------------------------------------------------------------------
+# Interleaving + stall/TTFT accounting (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_prefill_interleaves_with_decode_and_never_stalls(small_model):
+    """A long prompt admitted while another request decodes: its chunks run
+    ALONGSIDE pooled decode steps — the decoding request receives a token
+    on every step of the long prefill (no stall longer than one chunk)."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                      prefill_chunk=4)
+    steps_seen = []
+    decoder = Request("warm", max_new_tokens=20,
+                      stream=lambda t: steps_seen.append(
+                          eng.metrics.decode_steps))
+    long = Request("L" * 40, max_new_tokens=4)
+    eng.generate([decoder, long], arrivals=[0, 2])
+    m = eng.metrics
+    assert m.decode_stall_steps == 0
+    assert m.interleaved_steps > 0            # chunks really rode decode steps
+    assert m.prefill_chunks >= 1 + 41 // 4    # decoder's + the long's chunks
+    # the decoder streamed one token per pooled decode step, monotonically:
+    # the long prefill never inserted a decode-free gap
+    deltas = np.diff([s for s in steps_seen if s > 0])
+    assert np.all(deltas == 1), steps_seen
+
+
+def test_short_request_overtakes_long_prefill(small_model):
+    """SRF prefill scheduling: a short request admitted while a long prompt
+    is mid-prefill takes its first token after at most one chunk per step
+    of waiting (ttft_prefill_tokens bound) instead of after the whole long
+    prefill."""
+    cfg, params = small_model
+    chunk = 4
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                      prefill_chunk=chunk)
+    long = Request("L" * 40, max_new_tokens=4)
+    short = Request("hi", max_new_tokens=3)
+    eng.generate([long, short], arrivals=[0, 2])
+    assert short.ttft_prefill_tokens is not None
+    assert short.ttft_steps is not None
+    # bounded by the per-step chunk budget over its wait, and strictly less
+    # than the long prompt it queued behind
+    assert short.ttft_prefill_tokens <= chunk * max(1, short.ttft_steps)
+    assert short.ttft_prefill_tokens < 41
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing through chunks
+# ---------------------------------------------------------------------------
+
+def test_fully_shared_prompt_prefills_one_chunk(small_model):
+    """A prompt lying entirely inside a live slot's prefix runs exactly ONE
+    1-token chunk (the last position, to sample), writing nothing."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                      kv_mode="fp", cache_dtype=jnp.float32, prefill_chunk=8)
+    a = Request("abcdefghijkl", max_new_tokens=12)
+    b = Request("abcdefghijkl", max_new_tokens=4)
+    eng.generate([a, b], arrivals=[0, 1])
+    m = eng.metrics
+    assert m.prefix_hits == 1
+    # prompt = 13 ids: slot a runs ceil(13/8)=2 chunks; slot b runs 1
+    # single-token chunk (chunk bucket 1) instead of re-prefilling 13
+    assert m.prefill_chunks == 3
+    assert m.prefill_chunk_tokens == 13 + 1
+    assert (1, 2) in eng.prefill_buckets
+    # and the sharer's outputs match an unshared run bit for bit
+    eng2 = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                       kv_mode="fp", cache_dtype=jnp.float32,
+                       prefill_chunk=8, prefix_sharing=False)
+    a2 = Request("abcdefghijkl", max_new_tokens=12)
+    b2 = Request("abcdefghijkl", max_new_tokens=4)
+    eng2.generate([a2, b2], arrivals=[0, 1])
+    assert a.out_tokens == a2.out_tokens and b.out_tokens == b2.out_tokens
+
+
+def test_share_waits_for_mid_prefill_source(small_model):
+    """Two identical long prompts arriving together: the second admission
+    WAITS for the first one's chunks (pending) and then maps its pages —
+    sharing engages instead of silently recomputing the prefix."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, max_batch=3, s_max=64, page_size=8,
+                      kv_mode="fp", cache_dtype=jnp.float32, prefill_chunk=8)
+    prompts = ["abcdefghijklmnopqrstuvwxyz"] * 2
+    reqs = [Request(p, max_new_tokens=5) for p in prompts]
+    eng.generate(reqs)
+    m = eng.metrics
+    assert m.prefix_hits == 1
+    assert m.shared_pages_mapped >= 3          # 27 ids -> 3 whole + tail
+    # the sharer ran one 1-token chunk, not a second 27-token prefill
+    assert m.prefill_chunk_tokens == 27 + 1
+    assert reqs[0].out_tokens == reqs[1].out_tokens
+
+
+# ---------------------------------------------------------------------------
+# Preemption through chunks
+# ---------------------------------------------------------------------------
+
+def test_preemption_replays_through_chunks_bit_exact(small_model):
+    """Preempted requests resume by re-prefilling prompt + generated tokens
+    in chunks; fp pages at fp32 reproduce the uncontended outputs exactly
+    (the PR 3/4 preemption guarantee survives the chunked prefill)."""
+    cfg, params = small_model
+
+    def run(n_pages):
+        eng = ServeEngine(cfg, params, max_batch=3, s_max=64, page_size=8,
+                          n_pages=n_pages, kv_mode="fp",
+                          cache_dtype=jnp.float32, prefill_chunk=4)
+        reqs = [Request("abcdefgh", max_new_tokens=20),
+                Request("ij klmno", max_new_tokens=20),
+                Request("pq", max_new_tokens=20)]
+        eng.generate(reqs)
+        return [r.out_tokens for r in reqs], eng.metrics
+
+    toks_big, m_big = run(None)
+    toks_small, m_small = run(8)
+    assert m_big.preemptions == 0
+    assert m_small.preemptions >= 1
+    assert toks_small == toks_big
+    assert m_small.completed == 3

@@ -1,0 +1,20 @@
+"""Docs can't rot silently: run the link check + CLI smoke in tier 1.
+
+``tools/check_docs.py`` verifies every relative markdown link in
+README.md + docs/ resolves, and that every ``python -m ...`` command the
+docs quote parses ``--help`` and still advertises each quoted ``--flag``.
+CI runs the same script as a dedicated docs job.
+"""
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def test_docs_links_and_cli_commands():
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "check_docs.py")],
+        capture_output=True, text=True, cwd=REPO, timeout=600)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 errors" in proc.stdout, proc.stdout

@@ -1,0 +1,132 @@
+"""CLI flag plumbing for the serving launcher (`repro.launch.serve`).
+
+Previously exercised only by hand: these tests pin that `--backend`,
+`--kv-mode`, `--page-size`, `--n-pages`, `--prefill-chunk`, `--max-batch`
+and `--s-max` reach `ServeEngine` unmangled (and that `--quant`/`--backend`
+reach the quantization policy), by stubbing the engine/quantizer at the
+launcher's module seam — no model compute runs."""
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import serve as L
+
+
+class _StubMetrics:
+    def report(self):
+        # every key the launcher's summary line reads
+        return {k: 0.0 for k in (
+            "tokens_per_sec", "decode_steps", "decode_batch_mean",
+            "prefills", "prefill_chunks", "interleaved_steps",
+            "decode_stall_steps", "ttft_ms_mean", "pool_occupancy_mean",
+            "pool_occupancy_peak", "fragmentation_mean", "cache_bytes",
+            "kv_read_savings", "kv_bytes_read", "kv_bytes_read_dense",
+            "prefix_hits", "cow_copies")}
+
+
+class _StubPool:
+    mode = "stub"
+
+
+class _StubEngine:
+    """Captures constructor args; generate() marks requests done."""
+    calls = []
+
+    def __init__(self, cfg, params, **kw):
+        self.cfg, self.params, self.kw = cfg, params, kw
+        self.metrics, self.pool = _StubMetrics(), _StubPool()
+        _StubEngine.calls.append(self)
+
+    def generate(self, reqs, arrivals=None):
+        for r in reqs:
+            r.done = True
+        return reqs
+
+    @staticmethod
+    def text(req):
+        return ""
+
+
+@pytest.fixture
+def stubbed(monkeypatch):
+    _StubEngine.calls = []
+    captured = {}
+
+    def fake_quantize_model(cfg, params, calib, policy, **kw):
+        captured["policy"] = policy
+        captured["quantize_kw"] = kw
+        return "ARTIFACT"
+
+    monkeypatch.setattr(L, "ServeEngine", _StubEngine)
+    monkeypatch.setattr(L, "quantize_model", fake_quantize_model)
+    return captured
+
+
+def _engine_kw(argv, stubbed):
+    assert L.main(argv) == 0
+    assert len(_StubEngine.calls) == 1
+    return _StubEngine.calls[0]
+
+
+def test_defaults_reach_engine(stubbed):
+    eng = _engine_kw(["--quant", "fp"], stubbed)
+    kw = eng.kw
+    assert kw["max_batch"] == 2 and kw["s_max"] == 128
+    assert kw["kv_mode"] is None            # auto
+    assert kw["page_size"] == 16
+    assert kw["n_pages"] is None
+    assert kw["prefill_chunk"] == 32
+    assert kw["cache_dtype"] == jnp.bfloat16
+    assert eng.params is not None           # fp path: raw params, no artifact
+
+
+def test_pool_flags_reach_engine_unmangled(stubbed):
+    eng = _engine_kw(
+        ["--quant", "fp", "--kv-mode", "int8", "--page-size", "4",
+         "--n-pages", "99", "--prefill-chunk", "7", "--max-batch", "5",
+         "--s-max", "256"], stubbed)
+    kw = eng.kw
+    assert kw["kv_mode"] == "int8"
+    assert kw["page_size"] == 4
+    assert kw["n_pages"] == 99
+    assert kw["prefill_chunk"] == 7
+    assert kw["max_batch"] == 5
+    assert kw["s_max"] == 256
+
+
+def test_quantized_path_passes_artifact_and_backend(stubbed):
+    eng = _engine_kw(["--quant", "muxq", "--backend", "fused",
+                      "--kv-mode", "fp"], stubbed)
+    assert eng.params == "ARTIFACT"         # artifact IS the params arg
+    assert eng.kw["kv_mode"] == "fp"
+    policy = stubbed["policy"]
+    spec = policy.resolve("mlp_up")
+    assert spec.method == "muxq"
+    assert spec.backend == "fused"
+    assert spec.weight_granularity == "per_channel"  # fused packing contract
+    assert stubbed["quantize_kw"]["pack_target"] == "both"
+
+
+def test_fake_backend_policy(stubbed):
+    _engine_kw(["--quant", "smoothquant"], stubbed)
+    spec = stubbed["policy"].resolve("attn_qkv")
+    assert spec.method == "smoothquant"
+    assert getattr(spec, "backend", "fake") == "fake"
+
+
+def test_pack_target_flag_reaches_quantizer(stubbed):
+    _engine_kw(["--quant", "muxq", "--pack-target", "fused",
+                "--backend", "fused"], stubbed)
+    assert stubbed["quantize_kw"]["pack_target"] == "fused"
+
+
+def test_fused_tree_pack_target_rejected(stubbed):
+    with pytest.raises(SystemExit, match="pack-target"):
+        L.main(["--quant", "muxq", "--backend", "fused",
+                "--pack-target", "tree"])
+    assert not _StubEngine.calls
+
+
+def test_llm_int8_fused_rejected(stubbed):
+    with pytest.raises(SystemExit, match="llm_int8"):
+        L.main(["--quant", "llm_int8", "--backend", "fused"])
+    assert not _StubEngine.calls

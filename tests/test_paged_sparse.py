@@ -38,6 +38,18 @@ BASE = QuantConfig(method="muxq", outlier_mode="static",
 FUSED = BASE.replace(backend="fused")
 
 
+def _dense_prefill(eng, ids):
+    """Full-prompt dense prefill (the engine's OLD prefill path, kept here
+    as the parity oracle): (next_token, k [L, s, kvh, dh], v)."""
+    from repro.models.attention import init_cache
+    tokens = jnp.asarray(ids)[None]
+    cache = init_cache(eng.cfg, 1, tokens.shape[1], dtype=eng.cache_dtype)
+    out = T.forward(eng.cfg, eng.params, tokens, eng.ctx, cache=cache,
+                    qparams=eng.qparams)
+    nxt = int(jnp.argmax(out["logits"][0, -1, : eng.cfg.vocab_size]))
+    return nxt, out["cache"]["k"][:, 0], out["cache"]["v"][:, 0]
+
+
 @pytest.fixture(scope="module")
 def small_model():
     cfg = get_config("gpt2-small", reduced=True).replace(
@@ -77,7 +89,7 @@ def test_sparse_gather_bit_exact_vs_full_table(engines_src, small_model,
                       page_size=8, kv_mode="fp", cache_dtype=jnp.float32)
     ids = tok.encode("abcdefghijk")          # 12 ids -> 2 pages of 8
     s = len(ids)
-    nxt, k, v = eng._prefill(ids)
+    nxt, k, v = _dense_prefill(eng, ids)
     assert eng.pool.admit(0, s)
     eng.pool.write_prefill(0, k, v)
     assert eng.pool.ensure(0, s // eng.pool.page_size)
@@ -256,17 +268,23 @@ def test_share_detection_prefers_longest_prefix(small_model):
     ids_b = np.arange(1, 5, dtype=np.int32)
     assert eng.pool.admit(0, len(ids_a))
     assert eng.pool.admit(1, len(ids_b))
-    sched.slots[0] = _Slot(object(), 0.0, ids_a)
-    sched.slots[1] = _Slot(object(), 0.0, ids_b)
-    src, n_share, write_from = sched._shared_prefix(
+    sched.slots[0] = _Slot(object(), 0.0, ids_a, 0, 0, prefilling=False)
+    sched.slots[1] = _Slot(object(), 0.0, ids_b, 0, 1, prefilling=False)
+    src, n_share, write_from, pending = sched._shared_prefix(
         np.concatenate([np.arange(1, 11, dtype=np.int32), [99]]))
-    assert src == 0                                   # 10-id prefix beats 4
+    assert src == 0 and not pending                   # 10-id prefix beats 4
     assert n_share == 2 and write_from == 8           # whole pages only
     # prompt fully inside the prefix: partial tail page shares too
-    src, n_share, write_from = sched._shared_prefix(
+    src, n_share, write_from, pending = sched._shared_prefix(
         np.arange(1, 11, dtype=np.int32))             # 10 ids, c == len
-    assert src == 0 and n_share == 3
+    assert src == 0 and n_share == 3 and not pending
     assert write_from == 10                           # nothing to prefill
+    # a mid-prefill source that has not written the prefix yet is PENDING:
+    # admission waits a step instead of recomputing what is being written
+    sched.slots[0].prefilling, sched.slots[0].pre_pos = True, 4
+    src, n_share, write_from, pending = sched._shared_prefix(
+        np.arange(1, 11, dtype=np.int32))
+    assert pending and src is None
     eng.pool.release(0)
     eng.pool.release(1)
 
@@ -344,7 +362,7 @@ def test_attention_decode_paged_interpret_impl(small_model):
         eng = ServeEngine(cfg, params, max_batch=2, s_max=32, page_size=8,
                           kv_mode=kv_mode, cache_dtype=jnp.float32)
         ids = tok.encode("abcdefghij")
-        nxt, k, v = eng._prefill(ids)
+        nxt, k, v = _dense_prefill(eng, ids)
         assert eng.pool.admit(0, len(ids))
         eng.pool.write_prefill(0, k, v)
         assert eng.pool.ensure(0, len(ids) // eng.pool.page_size)

@@ -151,15 +151,16 @@ def test_fp_pages_bit_exact_vs_dense_decode(small_model):
     def paged_logits(kv_mode):
         eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=16,
                           kv_mode=kv_mode, cache_dtype=jnp.float32)
-        tok0, k, v = eng._prefill(ids)
-        assert tok0 == nxt
+        # dense full-prompt prefill (the parity oracle), scattered into
+        # pages through the pool's host-side write path
+        k, v = out["cache"]["k"][:, 0, :s], out["cache"]["v"][:, 0, :s]
         assert eng.pool.admit(0, s)
         eng.pool.write_prefill(0, k, v)
         assert eng.pool.ensure(0, s // eng.pool.page_size)
         pos = np.zeros(2, np.int32)
         pos[0] = s
         last = np.zeros(2, np.int32)
-        last[0] = tok0
+        last[0] = nxt
         lg, _ = T.decode_step_paged(
             cfg, eng.params, jnp.asarray(last)[:, None], eng.pool.state(),
             eng.pool.table(), jnp.asarray(pos), eng.ctx,

@@ -1,0 +1,119 @@
+"""Docs-rot guard: link check + CLI smoke over README.md and docs/.
+
+Two checks, both cheap enough for every CI run (and wrapped by
+``tests/test_docs.py`` so the tier-1 gate catches rot locally too):
+
+1. **Relative links resolve.**  Every ``[text](target)`` markdown link
+   whose target is not an absolute URL must point at an existing file or
+   directory (anchors are stripped; ``http(s)://`` and ``mailto:`` are
+   skipped).
+
+2. **Quoted CLI commands parse.**  Every ``python -m <module> ...``
+   command quoted in a code block is smoke-checked: the module must
+   import and exit 0 under ``--help``, and every ``--flag`` the docs
+   quote must appear in that help text — so a renamed or removed flag
+   breaks the build instead of silently rotting the docs.
+
+Usage:  python tools/check_docs.py  [files...]
+        (default: README.md + docs/*.md, repo-root-relative)
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CMD_RE = re.compile(r"(?:^|\s)python\s+-m\s+([\w.]+)((?:[ \t]+\S+)*)", re.M)
+FLAG_RE = re.compile(r"(--[\w-]+)")
+# only smoke modules that live in this repo
+MODULE_PREFIXES = ("repro.", "benchmarks.")
+
+
+def doc_files(argv) -> list:
+    if argv:
+        return [Path(a).resolve() for a in argv]
+    return [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+
+
+def _rel(path: Path) -> str:
+    try:
+        return str(path.relative_to(REPO))
+    except ValueError:
+        return str(path)
+
+
+def check_links(path: Path) -> list:
+    errors = []
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).exists():
+            errors.append(f"{_rel(path)}: broken link -> {target}")
+    return errors
+
+
+def extract_commands(path: Path) -> list:
+    """(module, [flags]) for every repo CLI command quoted in the doc."""
+    out = []
+    for m in CMD_RE.finditer(path.read_text()):
+        module, rest = m.group(1), m.group(2)
+        if module.startswith(MODULE_PREFIXES):
+            out.append((module, FLAG_RE.findall(rest)))
+    return out
+
+
+def check_commands(commands) -> list:
+    """Run each distinct module once under --help; verify quoted flags."""
+    errors = []
+    by_module = {}
+    for (doc, module, flags) in commands:
+        by_module.setdefault(module, []).append((doc, flags))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO / "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    for module, uses in sorted(by_module.items()):
+        proc = subprocess.run(
+            [sys.executable, "-m", module, "--help"],
+            capture_output=True, text=True, env=env, cwd=REPO, timeout=300)
+        if proc.returncode != 0:
+            errors.append(f"`python -m {module} --help` failed "
+                          f"(rc={proc.returncode}): {proc.stderr[-500:]}")
+            continue
+        for doc, flags in uses:
+            for flag in flags:
+                if flag not in proc.stdout:
+                    errors.append(f"{doc}: quotes `{flag}` but "
+                                  f"`python -m {module} --help` does not "
+                                  "mention it")
+    return errors
+
+
+def main(argv=None) -> int:
+    files = doc_files(argv if argv is not None else sys.argv[1:])
+    errors, commands = [], []
+    for path in files:
+        if not path.exists():
+            errors.append(f"missing doc file: {path}")
+            continue
+        errors += check_links(path)
+        commands += [(_rel(path), mod, flags)
+                     for mod, flags in extract_commands(path)]
+    errors += check_commands(commands)
+    for e in errors:
+        print(f"ERROR: {e}")
+    n_mods = len({m for _, m, _ in commands})
+    print(f"checked {len(files)} docs, {n_mods} CLI modules: "
+          f"{len(errors)} errors")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
