@@ -3,8 +3,9 @@
 Drives ``ServeEngine`` (paged KV pool + pooled per-slot-position decode)
 with Poisson request arrivals and mixed prompt/output lengths, across
 execution backends (``fused`` packed-kernel / ``fake`` quantize-dequantize /
-``fp``) and page modes (``int8`` pages + per-(pos, head) scales vs ``fp``
-pages), and emits a machine-readable ``results/BENCH_serve.json``
+``fp``) and page modes (``int8`` pages + per-(pos, head) scales, ``int4``
+MUXQ'd nibble-packed pages, ``fp`` pages), and emits a machine-readable
+``results/BENCH_serve.json``
 ({case: {tokens_per_sec, ttft_ms_mean, pool occupancy/fragmentation,
 preemptions, kv_bytes_read / kv_bytes_read_dense / kv_read_savings,
 decode_buckets, prefix sharing stats, ...}}) so serving-throughput AND
@@ -19,7 +20,12 @@ decode), that the short request queued behind the long prompt waited out
 at most one chunk of foreign prefill per step — strictly less than the
 baseline's whole-prompt wait — and that chunked prefill compiled at most
 once per (chunk, page) bucket pair (the CI regression gates for the
-paged decode + chunked prefill paths).
+paged decode + chunked prefill paths).  The int4 page-mode gates assert
+that nibble-packed pages halve both the bytes-per-token and the decode KV
+read traffic vs int8 pages (``read_ratio <= 0.55`` over identical decode
+trajectories), that a fixed pool byte budget holds ~2x the concurrent
+prompts (``live_slots_peak`` ratio >= 1.8), and that one paged decode
+step's logits on int4 pages stay within ``INT4_QUALITY_RTOL`` of fp pages.
 
 CLI:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
@@ -38,7 +44,13 @@ RESULTS = Path(__file__).resolve().parent / "results"
 JSON_OUT = RESULTS / "BENCH_serve.json"
 
 BACKENDS = ("fused", "fake", "fp")
-KV_MODES = ("int8", "fp")
+KV_MODES = ("int8", "int4", "fp")
+
+# smoke gate: one paged decode step's logits on int4 pages vs fp pages
+# (identical dense-oracle prefill, same quantized weights) — max abs logit
+# error relative to the fp logit magnitude.  Int4 KV is lossy by design;
+# this bounds the loss so a packing/redistribution regression can't hide
+INT4_QUALITY_RTOL = 0.10
 
 
 def _model(smoke: bool):
@@ -209,6 +221,134 @@ def run_flood(*, smoke: bool = True, prefill_chunk: int = 16,
     return best
 
 
+# ---------------------------------------------------------------------------
+# Int4 KV pages: byte halving, concurrency at fixed pool bytes, quality
+# ---------------------------------------------------------------------------
+
+def _muxq_artifact(cfg, params):
+    """One calibrated muxq artifact (its ``kv_calib`` section feeds the int4
+    pools' outlier redistribution) shared by every kvq-comparison case."""
+    from repro.core.muxq import QuantConfig
+    from repro.core.policy import SitePolicy
+    from repro.quantize import quantize_model
+
+    base = QuantConfig(method="muxq", outlier_mode="static",
+                       act_granularity="per_token",
+                       weight_granularity="per_channel", real_int8=True,
+                       muxq_form="fused")
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (2, 32))}
+               for _ in range(2)]
+    return quantize_model(cfg, params, batches, SitePolicy.uniform(base))
+
+
+def _drive_no_eos(eng, reqs, arrivals=None) -> dict:
+    """Run requests with EOS stopping disabled: every request decodes
+    exactly ``max_new_tokens`` steps, so runs that differ ONLY in page mode
+    see identical admission/decode trajectories and their byte counters
+    compare 1:1.  (Greedy argmax on lossy pages can hit EOS at a different
+    step than on fp pages, which would silently change the number of decode
+    steps being priced and wash out the per-step byte ratio.)"""
+    sched = eng.scheduler()
+    sched.eos = -1          # no token id is ever -1
+    sched.run(reqs, arrivals)
+    assert all(r.done for r in reqs)
+    return sched.metrics.report()
+
+
+def run_kvq(*, seed: int = 0) -> dict:
+    """The int4 page-mode comparison: the SAME workload and weights (one
+    muxq artifact, ``kv_calib`` attached) through int8 / int4 / fp pools.
+    Returns the gate numbers the smoke run asserts on:
+
+      * ``bytes_ratio`` — pool bytes per token position, int4 / int8
+        (structural: nibble packing + bf16 scales make it exactly 0.5);
+      * ``read_ratio``  — decode ``kv_bytes_read`` int4 / int8 over
+        identical trajectories (EOS disabled; the per-step page buckets are
+        asserted identical first, so the ratio isolates page bytes);
+      * ``conc_ratio``  — ``live_slots_peak`` int4 / int8 at the SAME pool
+        page-byte budget: half-size pages mean twice the pages, so twice
+        the prompts resident at once;
+      * ``quality_rel_int4`` / ``quality_rel_int8`` — one paged decode
+        step's logits vs fp pages after an identical dense-oracle prefill
+        (max abs error / max abs fp logit).
+    """
+    import jax.numpy as jnp
+    from repro.data import tokenizer as tok
+    from repro.models import transformer as T
+    from repro.models.attention import init_cache
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, params = _model(True)
+    art = _muxq_artifact(cfg, params)
+    out = {}
+
+    # -- decode read traffic at equal page COUNTS ---------------------------
+    reps = {}
+    for mode in KV_MODES:
+        eng = ServeEngine(cfg, art, max_batch=4, s_max=64, page_size=8,
+                          kv_mode=mode)
+        reqs, arrivals = _workload(seed, 8, 0.5)
+        reps[mode] = _drive_no_eos(eng, reqs, arrivals)
+        out[f"traffic/{mode}"] = reps[mode]
+    r8, r4 = reps["int8"], reps["int4"]
+    assert r4["decode_buckets"] == r8["decode_buckets"], (
+        "int4 vs int8 decode trajectories diverged", r4, r8)
+    out["bytes_ratio"] = r4["bytes_per_token"] / r8["bytes_per_token"]
+    out["read_ratio"] = r4["kv_bytes_read"] / r8["kv_bytes_read"]
+
+    # -- concurrency at a fixed pool page-byte budget -----------------------
+    # prompts sized so each slot lives in exactly 3 pages, admit to release
+    # (20 ids + 4 decode tokens = 24 = 3 pages of 8; admission allocates 3,
+    # decode never grows): int8 gets 6 usable pages -> 2 resident prompts,
+    # int4 the same BYTES as 13 usable pages -> 4 resident.  Distinct
+    # prompts + prefix_sharing off keep page accounting exact.
+    peaks, budgets = {}, {}
+    for mode, n_pages in (("int8", 7), ("int4", 14)):
+        eng = ServeEngine(cfg, art, max_batch=8, s_max=32, page_size=8,
+                          n_pages=n_pages, kv_mode=mode, prefix_sharing=False)
+        budgets[mode] = eng.pool.page_read_bytes() * eng.pool.n_pages
+        reqs = [Request(c * 19, max_new_tokens=4) for c in "abcdefgh"]
+        rep = _drive_no_eos(eng, reqs, [0] * len(reqs))
+        peaks[mode] = rep["live_slots_peak"]
+        out[f"concurrency/{mode}"] = rep
+    assert budgets["int4"] == budgets["int8"], budgets   # same byte budget
+    out["conc_pool_bytes"] = budgets["int8"]
+    out["conc_ratio"] = peaks["int4"] / peaks["int8"]
+
+    # -- decode quality vs fp pages -----------------------------------------
+    ids = tok.encode("the pool quantizes kv pages")
+
+    def one_step_logits(mode):
+        eng = ServeEngine(cfg, art, max_batch=2, s_max=64, page_size=8,
+                          kv_mode=mode)
+        tokens = jnp.asarray(ids)[None]
+        cache = init_cache(cfg, 1, tokens.shape[1], dtype=eng.cache_dtype)
+        o = T.forward(cfg, eng.params, tokens, eng.ctx, cache=cache,
+                      qparams=eng.qparams)
+        nxt = int(jnp.argmax(o["logits"][0, -1, : cfg.vocab_size]))
+        assert eng.pool.admit(0, len(ids))
+        eng.pool.write_prefill(0, o["cache"]["k"][:, 0], o["cache"]["v"][:, 0])
+        assert eng.pool.ensure(0, len(ids) // eng.pool.page_size)
+        pos = np.zeros(2, np.int32)
+        pos[0] = len(ids)
+        last = np.zeros(2, np.int32)
+        last[0] = nxt
+        lg, _ = T.decode_step_paged(cfg, eng.params,
+                                    jnp.asarray(last)[:, None],
+                                    eng.pool.state(), eng.pool.table(),
+                                    jnp.asarray(pos), eng.ctx,
+                                    qparams=eng.qparams)
+        return np.asarray(lg[0, -1, : cfg.vocab_size], np.float32)
+
+    lgf = one_step_logits("fp")
+    scale = float(np.max(np.abs(lgf))) or 1.0
+    for mode in ("int8", "int4"):
+        err = float(np.max(np.abs(one_step_logits(mode) - lgf)))
+        out[f"quality_rel_{mode}"] = err / scale
+    return out
+
+
 def run(emit: bool = True, smoke: bool = True, **kw):
     """benchmarks.run suite hook: (name, us_per_decoded_token, derived)."""
     from benchmarks import common
@@ -303,6 +443,29 @@ def main(argv=None) -> int:
         assert flood_c["prefill_traces"] <= (
             len({c for c, _ in flood_c["prefill_buckets_seen"]})
             * len({p for _, p in flood_c["prefill_buckets_seen"]})), flood_c
+    # int4 page-mode comparison: byte halving, concurrency at fixed pool
+    # bytes, decode quality vs fp pages (always on the tiny smoke model —
+    # the ratios are structural, not throughput)
+    kvq = run_kvq(seed=args.seed)
+    results["kvq/compare"] = kvq
+    common.emit([("serve/kvq_int4", 0.0,
+                  f"read_ratio={kvq['read_ratio']:.3f}"
+                  f"_conc_ratio={kvq['conc_ratio']:.2f}"
+                  f"_quality_rel={kvq['quality_rel_int4']:.4f}")])
+    if args.smoke:
+        # CI gates for the int4 KV-page tentpole:
+        # 1. nibble packing + bf16 scales halve the page bytes exactly,
+        #    and the decode read traffic follows (identical trajectories)
+        assert kvq["bytes_ratio"] == 0.5, kvq["bytes_ratio"]
+        assert 0 < kvq["read_ratio"] <= 0.55, kvq["read_ratio"]
+        # 2. at a fixed pool byte budget, half-size pages hold ~2x the
+        #    concurrent prompts
+        assert kvq["conc_ratio"] >= 1.8, (kvq["conc_ratio"],
+                                          kvq["concurrency/int4"])
+        # 3. int4 decode quality stays bounded vs fp pages (int8 must not
+        #    be worse than the int4 bound either — it has more bits)
+        assert kvq["quality_rel_int4"] <= INT4_QUALITY_RTOL, kvq
+        assert kvq["quality_rel_int8"] <= INT4_QUALITY_RTOL, kvq
     for backend in args.backends:
         for kv_mode in args.kv_modes:
             rep = run_case(backend, kv_mode, smoke=args.smoke,

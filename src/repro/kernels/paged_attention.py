@@ -8,6 +8,11 @@ dimension streams one physical page per step from HBM and accumulates
 flash-attention-style (running max / denominator / un-normalized
 accumulator in VMEM scratch).  INT8 pages are dequantized in-kernel from
 their per-(position, head) scales — the int8 bytes are what crosses HBM.
+INT4 pages (MUXQ'd KV, ``repro.serve.kvq``) go further: the kernel unpacks
+two nibbles per byte, applies the per-(position, head) scale AND the
+per-head inverse magnitude-redistribution rows (``k_redist``/``v_redist``
+[kvh, dh]: 2^e on calibrated outlier channels) — so the *packed* int4
+bytes are what crosses HBM, half the int8 traffic.
 
 The page table arrives pre-sliced to the scheduler's bucketed page budget
 (``pages`` = table.shape[1]), so read traffic scales with the longest live
@@ -34,6 +39,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.serve.kvq import unpack_int4
 
 NEG_INF = -1e9          # matches models/attention.NEG_INF (parity)
 NO_WINDOW = 1 << 30     # "sliding window off" sentinel (int32-safe)
@@ -68,12 +75,16 @@ def paged_impl() -> str:
 # ---------------------------------------------------------------------------
 
 def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
-                        k_scale=None, v_scale=None, window=None,
+                        k_scale=None, v_scale=None, k_redist=None,
+                        v_redist=None, window=None,
                         softcap: Optional[float] = None):
     """Gather-then-attend reference.  q [b, h, dh]; k/v_pages
-    [n_pages, ps, kvh, dh] (+ optional [n_pages, ps, kvh, 1] int8 scales);
-    page_table [b, pages] int32; pos [b] int32; ``window`` a traced or
-    static int32 scalar (``NO_WINDOW`` disables).  Returns [b, h, dh].
+    [n_pages, ps, kvh, dh] (+ optional [n_pages, ps, kvh, 1] int8 scales;
+    int4 pages store nibble-packed [n_pages, ps, kvh, dh//2] with bf16
+    scales and per-head [kvh, dh] ``k_redist``/``v_redist`` inverse
+    redistribution rows); page_table [b, pages] int32; pos [b] int32;
+    ``window`` a traced or static int32 scalar (``NO_WINDOW`` disables).
+    Returns [b, h, dh].
 
     The op sequence mirrors ``models.attention.sdpa`` exactly — including
     the singleton query-sequence dim riding through the grouped einsums —
@@ -88,7 +99,13 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
         return gp.reshape(b, -1, *gp.shape[3:])
 
     kk, vv = gather(k_pages), gather(v_pages)
-    if k_scale is not None:
+    if k_redist is not None:
+        # int4: unpack nibbles, scale, undo the MUXQ magnitude shift
+        kk = (unpack_int4(kk).astype(jnp.float32)
+              * gather(k_scale).astype(jnp.float32) * k_redist).astype(q.dtype)
+        vv = (unpack_int4(vv).astype(jnp.float32)
+              * gather(v_scale).astype(jnp.float32) * v_redist).astype(q.dtype)
+    elif k_scale is not None:
         kk = (kk.astype(jnp.float32) * gather(k_scale)).astype(q.dtype)
         vv = (vv.astype(jnp.float32) * gather(v_scale)).astype(q.dtype)
     else:
@@ -118,8 +135,9 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
 
 def _kernel(tab_ref, pos_ref, win_ref,              # scalar prefetch
             q_ref, k_ref, v_ref, ks_ref, vs_ref,    # blocks (scales opt.)
+            kr_ref, vr_ref,                         # int4 redist rows (opt.)
             o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, nj: int, ps: int, int8: bool,
+            scale: float, nj: int, ps: int, mode: str,
             softcap: Optional[float]):
     bb, j = pl.program_id(0), pl.program_id(2)
 
@@ -130,11 +148,22 @@ def _kernel(tab_ref, pos_ref, win_ref,              # scalar prefetch
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     q = q_ref[0, 0].astype(jnp.float32)               # [g, dh]
-    k = k_ref[0, :, 0].astype(jnp.float32)            # [ps, dh]
-    v = v_ref[0, :, 0].astype(jnp.float32)
-    if int8:
-        k = k * ks_ref[0, :, 0].astype(jnp.float32)   # [ps, 1] bcast
-        v = v * vs_ref[0, :, 0].astype(jnp.float32)
+    k = k_ref[0, :, 0]                                # [ps, dh | dh//2]
+    v = v_ref[0, :, 0]
+    if mode == "int4":
+        # unpack two nibbles per byte, apply the per-(pos, head) scale and
+        # the per-head inverse redistribution rows ([1, dh] block bcast):
+        # only the packed int4 bytes ever crossed HBM
+        k = (unpack_int4(k).astype(jnp.float32)
+             * ks_ref[0, :, 0].astype(jnp.float32) * kr_ref[...])
+        v = (unpack_int4(v).astype(jnp.float32)
+             * vs_ref[0, :, 0].astype(jnp.float32) * vr_ref[...])
+    elif mode == "int8":
+        k = k.astype(jnp.float32) * ks_ref[0, :, 0].astype(jnp.float32)
+        v = v.astype(jnp.float32) * vs_ref[0, :, 0].astype(jnp.float32)
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
@@ -166,19 +195,24 @@ def _kernel(tab_ref, pos_ref, win_ref,              # scalar prefetch
 
 
 def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
-                           k_scale=None, v_scale=None, window=None,
+                           k_scale=None, v_scale=None, k_redist=None,
+                           v_redist=None, window=None,
                            softcap: Optional[float] = None,
                            interpret: bool = False):
     """Pallas paged-attention decode.  Same contract as
     :func:`paged_attention_ref`; the page table and per-slot positions ride
     scalar prefetch so the K/V BlockSpec index maps load physical pages
-    directly (no gathered intermediate)."""
+    directly (no gathered intermediate).  Int4 pages arrive nibble-packed
+    (last dim dh//2) with [kvh, dh] redistribution rows; the kernel block
+    loads one page of *packed* bytes and dequantizes in VMEM."""
     b, h, dh = q.shape
-    n_pages, ps, kvh, _ = k_pages.shape
+    n_pages, ps, kvh, pk_dh = k_pages.shape
     assert h % kvh == 0
     g = h // kvh
     nj = page_table.shape[1]
-    int8 = k_scale is not None
+    mode = ("int4" if k_redist is not None
+            else "int8" if k_scale is not None else "fp")
+    assert pk_dh == (dh // 2 if mode == "int4" else dh), (pk_dh, dh, mode)
     scale = dh ** -0.5
 
     table = page_table.astype(jnp.int32)
@@ -188,27 +222,37 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
 
     # page blocks: physical page tab[b, j], kv head hh, all ps positions
     kv_spec = pl.BlockSpec(
-        (1, ps, 1, dh),
+        (1, ps, 1, pk_dh),
         lambda bb, hh, j, tab, pos_r, win_r: (tab[bb, j], 0, hh, 0))
     sc_spec = pl.BlockSpec(
         (1, ps, 1, 1),
         lambda bb, hh, j, tab, pos_r, win_r: (tab[bb, j], 0, hh, 0))
     q_spec = pl.BlockSpec(
         (1, 1, g, dh), lambda bb, hh, j, tab, pos_r, win_r: (bb, hh, 0, 0))
+    # inert placeholder for operands a mode doesn't use (uniform signature)
+    def _inert_spec():
+        return pl.BlockSpec((1, 1),
+                            lambda bb, hh, j, tab, pos_r, win_r: (0, 0))
+    _inert = jnp.zeros((1, 1), jnp.float32)
 
     in_specs = [q_spec, kv_spec, kv_spec]
     args = [qg, k_pages, v_pages]
-    if int8:
+    if mode in ("int8", "int4"):
         in_specs += [sc_spec, sc_spec]
         args += [k_scale, v_scale]
     else:
-        # inert placeholders so the kernel signature stays uniform
-        in_specs += [
-            pl.BlockSpec((1, 1), lambda bb, hh, j, tab, pos_r, win_r: (0, 0)),
-            pl.BlockSpec((1, 1), lambda bb, hh, j, tab, pos_r, win_r: (0, 0)),
-        ]
-        args += [jnp.zeros((1, 1), jnp.float32),
-                 jnp.zeros((1, 1), jnp.float32)]
+        in_specs += [_inert_spec(), _inert_spec()]
+        args += [_inert, _inert]
+    if mode == "int4":
+        # per-head inverse redistribution rows: block [1, dh] at row hh
+        rd_spec = pl.BlockSpec(
+            (1, dh), lambda bb, hh, j, tab, pos_r, win_r: (hh, 0))
+        in_specs += [rd_spec, rd_spec]
+        args += [jnp.asarray(k_redist, jnp.float32),
+                 jnp.asarray(v_redist, jnp.float32)]
+    else:
+        in_specs += [_inert_spec(), _inert_spec()]
+        args += [_inert, _inert]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
@@ -221,7 +265,7 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
                         pltpu.VMEM((g, dh), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, nj=nj, ps=ps, int8=int8,
+        functools.partial(_kernel, scale=scale, nj=nj, ps=ps, mode=mode,
                           softcap=softcap),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
@@ -231,7 +275,8 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
 
 
 def paged_attention_decode(q, k_pages, v_pages, page_table, pos, *,
-                           k_scale=None, v_scale=None, window=None,
+                           k_scale=None, v_scale=None, k_redist=None,
+                           v_redist=None, window=None,
                            softcap: Optional[float] = None,
                            impl: Optional[str] = None):
     """Impl-dispatching entry point (see :func:`set_paged_impl`)."""
@@ -240,8 +285,9 @@ def paged_attention_decode(q, k_pages, v_pages, page_table, pos, *,
     if impl == "ref":
         return paged_attention_ref(
             q, k_pages, v_pages, page_table, pos, k_scale=k_scale,
-            v_scale=v_scale, window=window, softcap=softcap)
+            v_scale=v_scale, k_redist=k_redist, v_redist=v_redist,
+            window=window, softcap=softcap)
     return paged_attention_pallas(
         q, k_pages, v_pages, page_table, pos, k_scale=k_scale,
-        v_scale=v_scale, window=window, softcap=softcap,
-        interpret=(impl == "interpret"))
+        v_scale=v_scale, k_redist=k_redist, v_redist=v_redist,
+        window=window, softcap=softcap, interpret=(impl == "interpret"))

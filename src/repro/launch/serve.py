@@ -26,10 +26,14 @@ def main(argv=None) -> int:
     ap.add_argument("--backend", default="fake", choices=["fake", "fused"],
                     help="execution backend for quantized sites: 'fused' "
                          "runs the packed single-GEMM MUXQ kernel path")
-    ap.add_argument("--kv-mode", default="auto", choices=["auto", "int8", "fp"],
+    ap.add_argument("--kv-mode", default="auto",
+                    choices=["auto", "int8", "int4", "fp"],
                     help="page-pool mode: int8 pages + per-(pos, head) "
-                         "scales or fp pages; auto (default) = int8 for "
-                         "quantized serving, fp for --quant fp")
+                         "scales, int4 MUXQ'd nibble-packed pages (half the "
+                         "int8 bytes; calibrated outlier redistribution "
+                         "from the artifact's kv_calib section), or fp "
+                         "pages; auto (default) = int8 for quantized "
+                         "serving, fp for --quant fp")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV-cache page")
     ap.add_argument("--n-pages", type=int, default=None,

@@ -22,8 +22,34 @@ import jax.numpy as jnp
 from repro.kernels import paged_attention as PA
 from repro.models.common import ModelConfig, apply_rope, dense_init, softcap
 from repro.parallel.act_sharding import cache_update_mode
+from repro.serve import kvq
 
 NEG_INF = -1e9
+
+# Optional KV calibration hook: when set (repro.quantize installs a
+# kvq.KVCalibCollector over the eager calibration forwards), every
+# full-sequence attention reports its post-RoPE K/V so int4 KV pages can
+# calibrate per-head outlier channels.  None in all normal traced paths.
+_KV_OBSERVER = None
+
+
+def set_kv_observer(fn) -> None:
+    """Install (or clear, with None) the eager-calibration KV observer,
+    called as ``fn(layer_prefix, k, v)`` with [b, s, kvh, dh] tensors."""
+    global _KV_OBSERVER
+    _KV_OBSERVER = fn
+
+
+_ROUTING_KEYS = ("pos", "page_table", "start", "write_lo", "write_hi")
+
+
+def _write_cache(cache: dict, updates: dict) -> dict:
+    """New cache dict: every non-routing array passes through, quantized
+    writes overwrite — so mode-specific extras (int8/int4 scales, int4
+    redistribution rows) survive the step without per-mode plumbing."""
+    out = {n: cache[n] for n in cache if n not in _ROUTING_KEYS}
+    out.update(updates)
+    return out
 
 
 def init_attention(key, cfg: ModelConfig, cross: bool = False) -> dict:
@@ -106,6 +132,10 @@ def attention(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     q, k, v = _split_qkv(cfg, qkv)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    if _KV_OBSERVER is not None and not isinstance(x, jax.core.Tracer):
+        # eager calibration only: report the exact post-RoPE K/V the paged
+        # write path would quantize, keyed by the layer's site prefix
+        _KV_OBSERVER(getattr(ctx, "prefix", ""), k, v)
 
     if cache is not None:
         cache = dict(cache)
@@ -137,41 +167,25 @@ def attention_decode(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
-    int8_kv = "k_scale" in cache
-    if int8_kv:
-        # INT8 KV cache (Oaken-style; paper §1 KV-memory motivation): store
-        # int8 + per-(pos, head) scales; 2x capacity, ~2x decode read traffic
-        from repro.serve.kvcache import quantize_kv
-        qkv_new = quantize_kv(k, v)
-        k_w, v_w = qkv_new["k"], qkv_new["v"]
-        ks_w, vs_w = qkv_new["k_scale"], qkv_new["v_scale"]
-    else:
-        k_w, v_w = k, v
+    # the cache's key set names its page mode (int8: Oaken-style scales;
+    # int4: MUXQ'd nibbles + redistribution rows; fp: raw) — one quantize
+    # entry point for every mode, shared with the paged pool
+    quantizer = kvq.from_cache(cache)
+    parts = quantizer.quantize(k, v)
 
     if cache_update_mode() == "select":
         # elementwise write (shard-local under seq-sharded caches)
         sel = (jnp.arange(cache["k"].shape[1]) == pos)[None, :, None, None]
-        ck = jnp.where(sel, k_w.astype(cache["k"].dtype), cache["k"])
-        cv = jnp.where(sel, v_w.astype(cache["v"].dtype), cache["v"])
-        if int8_kv:
-            cks = jnp.where(sel, ks_w, cache["k_scale"])
-            cvs = jnp.where(sel, vs_w, cache["v_scale"])
+        written = {n: jnp.where(sel, parts[n].astype(cache[n].dtype),
+                                cache[n]) for n in parts}
     else:
         dus = jax.lax.dynamic_update_slice
-        ck = dus(cache["k"], k_w.astype(cache["k"].dtype), (0, pos, 0, 0))
-        cv = dus(cache["v"], v_w.astype(cache["v"].dtype), (0, pos, 0, 0))
-        if int8_kv:
-            cks = dus(cache["k_scale"], ks_w, (0, pos, 0, 0))
-            cvs = dus(cache["v_scale"], vs_w, (0, pos, 0, 0))
-    new_cache = {"k": ck, "v": cv, "pos": pos + 1}
-    if int8_kv:
-        new_cache.update(k_scale=cks, v_scale=cvs)
-        kk = (ck.astype(jnp.float32) * cks).astype(x.dtype)
-        vv = (cv.astype(jnp.float32) * cvs).astype(x.dtype)
-    else:
-        kk = ck.astype(x.dtype)
-        vv = cv.astype(x.dtype)
-    s_max = ck.shape[1]
+        written = {n: dus(cache[n], parts[n].astype(cache[n].dtype),
+                          (0, pos, 0, 0)) for n in parts}
+    new_cache = _write_cache(cache, written)
+    new_cache["pos"] = pos + 1
+    kk, vv = quantizer.dequantize(written, x.dtype)
+    s_max = written["k"].shape[1]
     kpos = jnp.arange(s_max)
     in_window = kpos > pos - cfg.window_size
     allow = (kpos <= pos) & (in_window | ~jnp.asarray(window_flag))
@@ -227,43 +241,34 @@ def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
-    int8_kv = "k_scale" in cache
-    if int8_kv:
-        from repro.serve.kvcache import quantize_kv
-        qkv_new = quantize_kv(k, v)
-        k_w, v_w = qkv_new["k"], qkv_new["v"]
-        ks_w, vs_w = qkv_new["k_scale"], qkv_new["v_scale"]
-    else:
-        k_w, v_w = k, v
+    # one quantize entry point for every page mode (fp/int8/int4) — the
+    # same kvq seam the pool's prefill writes go through
+    quantizer = kvq.from_cache(cache)
+    parts = quantizer.quantize(k, v)
 
     # scatter the new token's K/V into each slot's current page.  Inactive
     # slots all route to scratch page 0 (never read back): duplicate indices
     # there are harmless.
     page_idx = jnp.take_along_axis(page_table, (pos // ps)[:, None], 1)[:, 0]
     offset = pos % ps
-    ck = cache["k"].at[page_idx, offset].set(k_w[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[page_idx, offset].set(v_w[:, 0].astype(cache["v"].dtype))
-    if int8_kv:
-        cks = cache["k_scale"].at[page_idx, offset].set(ks_w[:, 0])
-        cvs = cache["v_scale"].at[page_idx, offset].set(vs_w[:, 0])
+    new_cache = _write_cache(cache, {
+        n: cache[n].at[page_idx, offset].set(
+            parts[n][:, 0].astype(cache[n].dtype)) for n in parts})
 
     # read path: the jnp gather reference on CPU, the Pallas kernel
-    # (page-table-indexed loads, in-kernel int8 dequant) on TPU/interpret —
-    # both in repro.kernels.paged_attention.  The traced per-layer window
-    # flag folds into an effective-window scalar either way.
+    # (page-table-indexed loads, in-kernel int8 dequant / int4 nibble
+    # unpack + inverse redistribution) on TPU/interpret — both in
+    # repro.kernels.paged_attention.  The traced per-layer window flag
+    # folds into an effective-window scalar either way.
     win = jnp.where(jnp.asarray(window_flag), cfg.window_size,
                     PA.NO_WINDOW).astype(jnp.int32)
     o = PA.paged_attention_decode(
-        q[:, 0], ck, cv, page_table, pos,
-        k_scale=cks if int8_kv else None,
-        v_scale=cvs if int8_kv else None,
-        window=win, softcap=cfg.attn_softcap)[:, None]
+        q[:, 0], new_cache["k"], new_cache["v"], page_table, pos,
+        window=win, softcap=cfg.attn_softcap,
+        **quantizer.kernel_operands(new_cache))[:, None]
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
               smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
-    new_cache = {"k": ck, "v": cv}
-    if int8_kv:
-        new_cache.update(k_scale=cks, v_scale=cvs)
     return out, new_cache
 
 
@@ -312,14 +317,8 @@ def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
-    int8_kv = "k_scale" in cache
-    if int8_kv:
-        from repro.serve.kvcache import quantize_kv
-        qkv_new = quantize_kv(k, v)
-        k_w, v_w = qkv_new["k"], qkv_new["v"]
-        ks_w, vs_w = qkv_new["k_scale"], qkv_new["v_scale"]
-    else:
-        k_w, v_w = k, v
+    quantizer = kvq.from_cache(cache)
+    parts = quantizer.quantize(k, v)
 
     # scatter the chunk's K/V into the slot's pages.  Positions outside the
     # write window (chunk tail padding past the prompt, prefix-shared
@@ -330,36 +329,24 @@ def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     logical = jnp.clip(p_abs // ps, 0, n_pages_budget - 1)
     page_idx = jnp.where(writable, page_table[logical], 0)
     offset = p_abs % ps
-    ck = cache["k"].at[page_idx, offset].set(k_w[0].astype(cache["k"].dtype))
-    cv = cache["v"].at[page_idx, offset].set(v_w[0].astype(cache["v"].dtype))
-    if int8_kv:
-        cks = cache["k_scale"].at[page_idx, offset].set(ks_w[0])
-        cvs = cache["v_scale"].at[page_idx, offset].set(vs_w[0])
+    new_cache = _write_cache(cache, {
+        n: cache[n].at[page_idx, offset].set(
+            parts[n][0].astype(cache[n].dtype)) for n in parts})
 
     # gather-read the slot's logical key range through the page table and
     # attend with the start-position-offset causal mask.  The op sequence
-    # (gather -> sdpa with a [1, 1, sq, sk] additive bias) mirrors the
-    # full-sequence prefill exactly; extra gathered keys past a query's
-    # position are NEG_INF-masked and underflow to exactly 0.
-    kk = ck[page_table].reshape(1, -1, *ck.shape[2:])       # [1, P*ps, kvh, dh]
-    vv = cv[page_table].reshape(1, -1, *cv.shape[2:])
-    if int8_kv:
-        kks = cks[page_table].reshape(1, -1, *cks.shape[2:])
-        vvs = cvs[page_table].reshape(1, -1, *cvs.shape[2:])
-        kk = (kk.astype(jnp.float32) * kks).astype(x.dtype)
-        vv = (vv.astype(jnp.float32) * vvs).astype(x.dtype)
-    else:
-        kk = kk.astype(x.dtype)
-        vv = vv.astype(x.dtype)
+    # (gather -> dequantize -> sdpa with a [1, 1, sq, sk] additive bias)
+    # mirrors the full-sequence prefill exactly; extra gathered keys past a
+    # query's position are NEG_INF-masked and underflow to exactly 0.
+    gathered = {n: new_cache[n][page_table].reshape(
+        1, -1, *new_cache[n].shape[2:]) for n in parts}     # [1, P*ps, kvh, .]
+    kk, vv = quantizer.dequantize(gathered, x.dtype)
     bias = causal_bias(C, n_pages_budget * ps, cfg.window_size, window_flag,
                        q_offset=start)
     o = sdpa(cfg, q, kk, vv, bias)
     o = o.reshape(b, C, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
               smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
-    new_cache = {"k": ck, "v": cv}
-    if int8_kv:
-        new_cache.update(k_scale=cks, v_scale=cvs)
     return out, new_cache
 
 

@@ -409,9 +409,10 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, ctx=None, *,
 
     if fam in ("dense", "moe"):
         flags = _window_flags(cfg)
-        int8_kv = "k_scale" in cache
-        scale_tree = ({"k_scale": cache["k_scale"], "v_scale": cache["v_scale"]}
-                      if int8_kv else {})
+        # any per-layer cache arrays beyond k/v (int8 scales, int4 scales +
+        # redistribution rows) ride the scan xs generically and come back
+        # stacked — the attention step passes unrecognized keys through
+        extra_tree = {n: cache[n] for n in cache if n not in ("k", "v", "pos")}
 
         def body(x, xs):
             lp, flag, sq, c_k, c_v, c_s = xs
@@ -430,13 +431,12 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, ctx=None, *,
                 m = M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
             if cfg.sandwich_norm:
                 m = apply_norm(cfg, lp["ln2b"], m)
-            sc_out = ({"k_scale": c_i["k_scale"], "v_scale": c_i["v_scale"]}
-                      if int8_kv else {})
+            sc_out = {n: c_i[n] for n in extra_tree}
             return x + m, (c_i["k"], c_i["v"], sc_out)
 
         if scan:
             xs = (params["layers"], flags, qparams or {}, cache["k"],
-                  cache["v"], scale_tree)
+                  cache["v"], extra_tree)
             x, (ks, vs, scs) = jax.lax.scan(body, x, xs)
         else:
             ks_l, vs_l, sc_l = [], [], []
@@ -444,13 +444,13 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, ctx=None, *,
                 x, (k_i, v_i, s_i) = body(x, (layer_slice(params["layers"], i),
                                               flags[i], _sq_for_layer(qparams, i),
                                               cache["k"][i], cache["v"][i],
-                                              jax.tree.map(lambda t: t[i], scale_tree)))
+                                              jax.tree.map(lambda t: t[i], extra_tree)))
                 ks_l.append(k_i); vs_l.append(v_i); sc_l.append(s_i)
             ks, vs = jnp.stack(ks_l), jnp.stack(vs_l)
-            scs = (jax.tree.map(lambda *t: jnp.stack(t), *sc_l) if int8_kv else {})
+            scs = (jax.tree.map(lambda *t: jnp.stack(t), *sc_l)
+                   if extra_tree else {})
         new_cache = {"k": ks, "v": vs, "pos": pos + 1}
-        if int8_kv:
-            new_cache.update(scs)
+        new_cache.update(scs)
 
     elif fam == "ssm":
         state_tree = {k: cache[k] for k in ("conv_x", "conv_bc", "ssm")}
@@ -566,9 +566,9 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
         x = x * math.sqrt(cfg.d_model)
 
     flags = _window_flags(cfg)
-    int8_kv = "k_scale" in kv
-    scale_tree = ({"k_scale": kv["k_scale"], "v_scale": kv["v_scale"]}
-                  if int8_kv else {})
+    # per-layer pool arrays beyond k/v (int8/int4 scales, int4 redist rows)
+    # ride the scan xs generically and come back stacked
+    extra_tree = {n: kv[n] for n in kv if n not in ("k", "v")}
 
     def body(x, xs):
         lp, flag, sq, c_k, c_v, c_s = xs
@@ -587,15 +587,12 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
             m = M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
         if cfg.sandwich_norm:
             m = apply_norm(cfg, lp["ln2b"], m)
-        sc_out = ({"k_scale": c_i["k_scale"], "v_scale": c_i["v_scale"]}
-                  if int8_kv else {})
+        sc_out = {n: c_i[n] for n in extra_tree}
         return x + m, (c_i["k"], c_i["v"], sc_out)
 
-    xs = (params["layers"], flags, qparams or {}, kv["k"], kv["v"], scale_tree)
+    xs = (params["layers"], flags, qparams or {}, kv["k"], kv["v"], extra_tree)
     x, (ks, vs, scs) = jax.lax.scan(body, x, xs)
-    new_kv = {"k": ks, "v": vs}
-    if int8_kv:
-        new_kv.update(scs)
+    new_kv = {"k": ks, "v": vs, **scs}
 
     x = apply_norm(cfg, params["ln_f"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -635,9 +632,9 @@ def prefill_chunk_paged(cfg: ModelConfig, params, tokens, kv: dict,
         x = x * math.sqrt(cfg.d_model)
 
     flags = _window_flags(cfg)
-    int8_kv = "k_scale" in kv
-    scale_tree = ({"k_scale": kv["k_scale"], "v_scale": kv["v_scale"]}
-                  if int8_kv else {})
+    # per-layer pool arrays beyond k/v (int8/int4 scales, int4 redist rows)
+    # ride the scan xs generically and come back stacked
+    extra_tree = {n: kv[n] for n in kv if n not in ("k", "v")}
 
     def body(x, xs):
         lp, flag, sq, c_k, c_v, c_s = xs
@@ -657,15 +654,12 @@ def prefill_chunk_paged(cfg: ModelConfig, params, tokens, kv: dict,
             m = M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
         if cfg.sandwich_norm:
             m = apply_norm(cfg, lp["ln2b"], m)
-        sc_out = ({"k_scale": c_i["k_scale"], "v_scale": c_i["v_scale"]}
-                  if int8_kv else {})
+        sc_out = {n: c_i[n] for n in extra_tree}
         return x + m, (c_i["k"], c_i["v"], sc_out)
 
-    xs = (params["layers"], flags, qparams or {}, kv["k"], kv["v"], scale_tree)
+    xs = (params["layers"], flags, qparams or {}, kv["k"], kv["v"], extra_tree)
     x, (ks, vs, scs) = jax.lax.scan(body, x, xs)
-    new_kv = {"k": ks, "v": vs}
-    if int8_kv:
-        new_kv.update(scs)
+    new_kv = {"k": ks, "v": vs, **scs}
 
     x = apply_norm(cfg, params["ln_f"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]

@@ -47,7 +47,11 @@ _SMOOTH_METHODS = ("smoothquant", "muxq_smooth")
 # "fused" bundles store stub {"q","s"} tree leaves for fused sites, "tree"
 # bundles omit kernel_buffers.npz / "@fused" scan entries entirely — both
 # load through the normal missing-group path.
-_FORMAT_VERSION = 2
+# v3 (current): + kv_calib group (int4 KV-page calibration: per-layer
+# per-head K/V channel amax, pooled outlier masks, redistribution exponent
+# — see repro.serve.kvq).  Absent in v1/v2 bundles and in bundles whose
+# calibration never ran; loads as an empty dict either way.
+_FORMAT_VERSION = 3
 
 PACK_TARGETS = ("both", "fused", "tree")
 
@@ -163,6 +167,10 @@ class QuantArtifact:
         default_factory=dict)
     params: Any = None
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # int4 KV-page calibration (repro.serve.kvq.build_kv_calib): k/v_amax
+    # [L, kvh, dh], pooled k/v_mask [kvh, dh], exp_factor, outlier_ratio.
+    # Empty when calibration never ran an attention forward.
+    kv_calib: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
 
     @property
     def prequantized(self) -> bool:
@@ -187,6 +195,7 @@ class QuantArtifact:
             "scan_qparams": _flatten_nested(art.scan_qparams),
             "kernel_buffers": _flatten_nested(art.kernel_buffers),
             "params": ckpt._flatten(art.params) if art.prequantized else {},
+            "kv_calib": art.kv_calib,
         }
         meta = {"format_version": _FORMAT_VERSION,
                 "policy": art.policy.to_json(),
@@ -198,7 +207,7 @@ class QuantArtifact:
     def load(cls, path: str) -> "QuantArtifact":
         groups, meta = ckpt.load_bundle(
             path, ["masks", "act_absmax", "smooth_factors", "scan_qparams",
-                   "kernel_buffers", "params"])
+                   "kernel_buffers", "params", "kv_calib"])
         policy = SitePolicy.from_json(meta.pop("policy"))
         version = meta.pop("format_version", None)
         # backward-compatible: v1 bundles (no kernel_buffers group, policies
@@ -212,7 +221,7 @@ class QuantArtifact:
                    smooth_factors=groups["smooth_factors"],
                    scan_qparams=_unflatten_nested(groups["scan_qparams"]),
                    kernel_buffers=_unflatten_nested(groups["kernel_buffers"]),
-                   params=params, meta=meta)
+                   params=params, meta=meta, kv_calib=groups["kv_calib"])
 
 
 # ---------------------------------------------------------------------------
@@ -326,14 +335,26 @@ def apply_pack_target(artifact: "QuantArtifact",
         meta={**artifact.meta, "pack_target": "fused"})
 
 
-def _run_calibration(cfg, params, batches, forward) -> CalibrationStats:
+def _run_calibration(cfg, params, batches, forward):
+    """Eager calibration pass.  Returns (matmul-site CalibrationStats,
+    kv_calib dict) — the same forwards feed both: the ctx hook sees every
+    matmul input, and a KV observer installed over
+    ``models.attention.attention`` captures the post-RoPE K/V projections
+    for the int4 KV-page calibration (``repro.serve.kvq``)."""
     from repro.core.calibrate import calibrate
+    from repro.models import attention as A
+    from repro.serve import kvq
     if forward is None:
         from repro.models import transformer as T
         forward = lambda p, b, ctx: T.forward(
             cfg, p, jnp.asarray(b["tokens"]), ctx, scan=False)
-    stats, _, _ = calibrate(forward, params, batches)
-    return stats
+    collector = kvq.KVCalibCollector()
+    A.set_kv_observer(collector)
+    try:
+        stats, _, _ = calibrate(forward, params, batches)
+    finally:
+        A.set_kv_observer(None)
+    return stats, kvq.build_kv_calib(collector)
 
 
 def _scan_key(cfg, base: str) -> str:
@@ -460,10 +481,11 @@ def quantize_model(cfg, params,
     """
     policy = as_policy(policy)
     stats: Optional[CalibrationStats] = None
+    kv_calib = None
     if isinstance(calib, CalibrationStats):
-        stats = calib
+        stats = calib       # precollected: no forwards run, no KV stats
     elif calib is not None:
-        stats = _run_calibration(cfg, params, calib, forward)
+        stats, kv_calib = _run_calibration(cfg, params, calib, forward)
     if stats is None and policy.needs_calibration():
         raise ValueError("policy needs static masks / smoothing factors but "
                          "no calibration data or stats were given")
@@ -502,7 +524,8 @@ def quantize_model(cfg, params,
         policy=policy, masks=masks, act_absmax=absmax, smooth_factors=factors,
         scan_qparams=_stack_qparams(cfg, masks, factors, buffers),
         kernel_buffers=buffers, params=packed,
-        meta={"n_sites": len(absmax), "n_fused_sites": len(buffers)})
+        meta={"n_sites": len(absmax), "n_fused_sites": len(buffers)},
+        kv_calib=kv_calib or {})
     return apply_pack_target(art, pack_target)
 
 

@@ -71,11 +71,16 @@ class ServeEngine:
 
     KV state lives in a paged pool: ``kv_mode='int8'`` stores pages as
     int8 + per-(position, head) scales (~2x+ cache capacity — the paper's
-    §1 KV-memory motivation), ``kv_mode='fp'`` stores ``cache_dtype``
+    §1 KV-memory motivation), ``kv_mode='int4'`` stores MUXQ'd
+    nibble-packed pages (two values per byte + bf16 scales — exactly half
+    the int8 page bytes; calibrated outlier channels are
+    magnitude-redistributed via the artifact's ``kv_calib`` section, see
+    :mod:`repro.serve.kvq`), ``kv_mode='fp'`` stores ``cache_dtype``
     pages (bit-exact parity against the dense cache path when
     ``cache_dtype`` matches).  The default (``kv_mode=None``) follows the
     weight path: int8 pages for quantized serving, fp pages for plain fp
-    params — an unquantized model never silently gets a lossy cache.
+    params — an unquantized model never silently gets a lossy cache; int4
+    pages are always opt-in.
     ``cache_dtype`` (default bf16) sets the fp-page dtype — fp serving no
     longer pays a 2x fp32 cache tax.
 
@@ -110,6 +115,9 @@ class ServeEngine:
         self.cfg, self.params = cfg, params
         self.max_batch, self.s_max = max_batch, s_max
         self.prefix_sharing = prefix_sharing
+        # the artifact's KV-page calibration (int4 outlier redistribution)
+        # — captured from the quant spec before it collapses into a ctx
+        kv_calib = getattr(quant, "kv_calib", None) or None
         self.ctx, qparams = as_ctx(quant)
         self.qparams = qparams
         self.greedy = greedy
@@ -141,7 +149,8 @@ class ServeEngine:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = int(prefill_chunk)
         self.pool = PagePool(cfg, max_batch, s_max, page_size=page_size,
-                             n_pages=n_pages, mode=kv_mode, dtype=cache_dtype)
+                             n_pages=n_pages, mode=kv_mode, dtype=cache_dtype,
+                             kv_calib=kv_calib)
         self.metrics = ServeMetrics()    # last generate() run's metrics
         self.decode_traces = 0           # pooled-step (re)trace counter
         self.decode_buckets = set()      # page-budget buckets seen (lifetime)

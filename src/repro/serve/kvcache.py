@@ -50,5 +50,10 @@ def init_int8_cache(cfg: ModelConfig, batch: int, s_max: int) -> dict:
 
 
 def cache_bytes(cache) -> int:
+    """True buffer bytes of the cache's KV payload: ``size * itemsize`` over
+    array leaves, so packed layouts (int4 nibble pages store head_dim/2 int8
+    bytes per position) report their physical footprint, not logical element
+    counts.  0-dim bookkeeping scalars (``pos``) are excluded — they are not
+    KV buffers."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache)
-               if hasattr(x, "dtype"))
+               if hasattr(x, "dtype") and getattr(x, "ndim", 0) > 0)

@@ -38,6 +38,9 @@ class ServeMetrics:
     occupancy: List[float] = dataclasses.field(default_factory=list)
     fragmentation: List[float] = dataclasses.field(default_factory=list)
     cache_bytes: int = 0
+    live_slots_peak: int = 0     # most slots concurrently admitted in a step
+    kv_mode: str = ""            # pool page mode ("fp"/"int8"/"int4")
+    bytes_per_token: float = 0.0  # page bytes per token position, all layers
     # block-sparse decode read accounting
     kv_bytes_read: int = 0         # bucketed page-budget gather (actual)
     kv_bytes_read_dense: int = 0   # full-capacity gather (counterfactual)
@@ -78,6 +81,9 @@ class ServeMetrics:
         if frag is not None:
             self.fragmentation.append(float(frag))
         self.cache_bytes = int(pool_stats.get("cache_bytes", self.cache_bytes))
+        self.kv_mode = str(pool_stats.get("kv_mode", self.kv_mode))
+        self.bytes_per_token = float(
+            pool_stats.get("bytes_per_token", self.bytes_per_token))
         self.pages_shared_peak = max(
             self.pages_shared_peak, int(pool_stats.get("pages_shared", 0)))
         # pool counters are lifetime (the pool outlives each generate());
@@ -115,6 +121,9 @@ class ServeMetrics:
             "pool_occupancy_peak": max(self.occupancy) if self.occupancy else 0.0,
             "fragmentation_mean": self._mean(self.fragmentation),
             "cache_bytes": self.cache_bytes,
+            "live_slots_peak": self.live_slots_peak,
+            "kv_mode": self.kv_mode,
+            "bytes_per_token": self.bytes_per_token,
             "kv_bytes_read": self.kv_bytes_read,
             "kv_bytes_read_dense": self.kv_bytes_read_dense,
             "kv_read_savings": (1.0 - self.kv_bytes_read / self.kv_bytes_read_dense

@@ -6,18 +6,28 @@ pages, admitted/finished sequences allocate/free pages in O(1) from a free
 list, and the decode step routes through a per-slot page table — so memory
 scales with *live tokens*, not ``max_batch * s_max``.
 
-Two page modes:
+Three page modes, each a :class:`repro.serve.kvq.KVQuantizer` (the single
+quantize/dequantize seam shared with the attention write/read paths):
 
-  * ``int8`` — pages hold K/V as int8 with per-(position, head) scales via
-    :func:`repro.serve.kvcache.quantize_kv` (the paper's §1 KV-memory
-    motivation: ~2x capacity per byte of HBM, Oaken-style);
+  * ``int8`` — pages hold K/V as int8 with per-(position, head) f32 scales
+    (the paper's §1 KV-memory motivation: ~2x capacity per byte of HBM,
+    Oaken-style);
+  * ``int4`` — MUXQ'd nibble pages: calibrated outlier channels are
+    magnitude-redistributed before a symmetric 4-bit quantization, K/V
+    pack two values per byte and scales store as bf16 — exactly half the
+    int8 page bytes, so the same pool byte budget holds 2x the live
+    tokens.  Pass the artifact's ``kv_calib`` section for the calibrated
+    redistribution (uncalibrated int4 degrades to plain symmetric int4);
   * ``fp``   — pages in ``dtype`` (default bf16), the parity-testing mode
     (bit-exact against the dense cache path).
 
 Layout (``L`` = attention layers, leading so the pool rides ``lax.scan``):
 
-  k/v        [L, n_pages, page_size, kvh, dh]
-  k/v_scale  [L, n_pages, page_size, kvh, 1]   (int8 mode only)
+  k/v        [L, n_pages, page_size, kvh, dh]     (int4: [..., dh//2] int8)
+  k/v_scale  [L, n_pages, page_size, kvh, 1]      (int8: f32; int4: bf16)
+  k/v_redist [L, kvh, dh] f32                     (int4 only; NOT pages —
+                                                   per-head channel
+                                                   redistribution rows)
   page_table [n_slots, pages_per_slot] int32   host-side, 0 = unallocated
   refcount   [n_pages] int32                   host-side page sharing state
 
@@ -52,7 +62,8 @@ import numpy as np
 
 from repro.models.common import ModelConfig
 from repro.models.attention import n_attn_layers
-from repro.serve.kvcache import cache_bytes, quantize_kv
+from repro.serve import kvq
+from repro.serve.kvcache import cache_bytes
 
 
 def bucket_pow2(n: int, cap: int) -> int:
@@ -71,8 +82,9 @@ class PagePool:
 
     def __init__(self, cfg: ModelConfig, n_slots: int, s_max: int, *,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 mode: str = "int8", dtype=jnp.bfloat16):
-        if mode not in ("int8", "fp"):
+                 mode: str = "int8", dtype=jnp.bfloat16,
+                 kv_calib: Optional[dict] = None):
+        if mode not in kvq.KV_MODES:
             raise ValueError(f"unknown page mode {mode!r}")
         self.cfg, self.mode, self.dtype = cfg, mode, dtype
         self.n_slots, self.page_size = n_slots, page_size
@@ -85,17 +97,16 @@ class PagePool:
             raise ValueError("pool needs at least one allocatable page")
 
         L, kvh, dh = n_attn_layers(cfg), cfg.n_kv_heads, cfg.head_dim
-        shape = (L, self.n_pages, page_size, kvh, dh)
-        if mode == "int8":
-            self.kv: Dict[str, jnp.ndarray] = {
-                "k": jnp.zeros(shape, jnp.int8),
-                "v": jnp.zeros(shape, jnp.int8),
-                "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
-                "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
-            }
-        else:
-            self.kv = {"k": jnp.zeros(shape, dtype),
-                       "v": jnp.zeros(shape, dtype)}
+        self.quantizer = kvq.make_quantizer(mode, kvh=kvh, dh=dh,
+                                            dtype=dtype, calib=kv_calib)
+        self.kv: Dict[str, jnp.ndarray] = self.quantizer.page_arrays(
+            L, self.n_pages, page_size, kvh, dh)
+        # keys whose second axis indexes pages (COW copies / prefill
+        # scatters / read-bytes pricing touch these ONLY); the rest of
+        # self.kv is per-pool state like the int4 redistribution rows,
+        # stacked [L, ...] so it rides the same scan xs as the pages
+        self._page_keys = tuple(self.kv)
+        self.kv.update(self.quantizer.pool_state(L, kvh, dh))
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self.refcount = np.zeros(self.n_pages, np.int32)
         self._free = list(range(self.n_pages - 1, 0, -1))  # pop() -> page 1 first
@@ -192,8 +203,9 @@ class PagePool:
             self.alloc_failures += 1
             return False
         new = self._free.pop()
-        # device-side page copy across every pool array (all layers at once)
-        for name in self.kv:
+        # device-side page copy across every page-indexed array (all layers
+        # at once; pool state like the int4 redist rows has no page axis)
+        for name in self._page_keys:
             self.kv[name] = self.kv[name].at[:, new].set(self.kv[name][:, old])
         self.refcount[old] -= 1
         self.refcount[new] = 1
@@ -253,8 +265,11 @@ class PagePool:
 
     def page_read_bytes(self) -> int:
         """Bytes one page costs to read across ALL attention layers (K + V
-        + int8 scales) — the unit for the decode bytes-read metrics."""
-        return self.cache_bytes() // self.n_pages
+        + scales; int4 counts true packed nibble bytes) — the unit for the
+        decode bytes-read metrics.  Only page-indexed arrays count: the
+        int4 redistribution rows are per-pool constants, not page traffic."""
+        return sum(self.kv[n].size * self.kv[n].dtype.itemsize
+                   for n in self._page_keys) // self.n_pages
 
     # -- prefill write -------------------------------------------------------
 
@@ -281,12 +296,7 @@ class PagePool:
         if start_pos:
             k, v = k[:, start_pos:], v[:, start_pos:]
             s = s - start_pos
-        if self.mode == "int8":
-            qc = quantize_kv(k, v)
-            parts = {"k": qc["k"], "v": qc["v"],
-                     "k_scale": qc["k_scale"], "v_scale": qc["v_scale"]}
-        else:
-            parts = {"k": k.astype(self.dtype), "v": v.astype(self.dtype)}
+        parts = self.quantizer.quantize(k, v)
         n = self.pages_needed(s)
         pids = self.page_table[slot, first:first + n]
         assert np.all(pids > 0), (slot, "prefill write into unallocated page")
@@ -319,6 +329,10 @@ class PagePool:
             "free_count": self.free_count,
             "alloc_failures": self.alloc_failures,
             "cache_bytes": self.cache_bytes(),
+            "kv_mode": self.mode,
+            # page bytes one token position costs across all layers (K + V
+            # + scales) — fp > int8 > int4 at a fixed model shape
+            "bytes_per_token": self.page_read_bytes() / self.page_size,
             "pages_shared": int((self.refcount > 1).sum()),
             "share_count": self.share_count,
             "cow_count": self.cow_count,

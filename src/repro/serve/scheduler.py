@@ -182,6 +182,8 @@ class Scheduler:
                     entry[3] = step_clock
                     entry[4] = m.prefill_chunk_tokens
             self._admit(queue, step_clock)
+            m.live_slots_peak = max(
+                m.live_slots_peak, sum(s is not None for s in self.slots))
             if not any(self.slots):
                 if queue:           # everything pending is a future arrival
                     step_clock += 1

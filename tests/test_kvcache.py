@@ -61,17 +61,18 @@ def test_cache_bytes_accounting_vs_fp_cache():
     n, kv, dh = n_attn_layers(cfg), cfg.n_kv_heads, cfg.head_dim
     elems = n * b * s * kv
     c8 = kvcache.init_int8_cache(cfg, b, s)
-    expect8 = 2 * elems * dh * 1 + 2 * elems * 1 * 4 + 4   # k/v + scales + pos
+    # 0-dim bookkeeping scalars (pos) are NOT buffer bytes
+    expect8 = 2 * elems * dh * 1 + 2 * elems * 1 * 4       # k/v + scales
     assert kvcache.cache_bytes(c8) == expect8
     c32 = init_cache(cfg, b, s, dtype=jnp.float32)
-    expect32 = 2 * elems * dh * 4 + 4
+    expect32 = 2 * elems * dh * 4
     assert kvcache.cache_bytes(c32) == expect32
     c16 = init_cache(cfg, b, s, dtype=jnp.bfloat16)
-    expect16 = 2 * elems * dh * 2 + 4
+    expect16 = 2 * elems * dh * 2
     assert kvcache.cache_bytes(c16) == expect16
     # int8+scales vs fp: the K/V payload compresses 4x (vs fp32) / 2x (vs
     # bf16); the per-(pos, head) f32 scales add exactly 4/dh per element
-    ratio32 = (kvcache.cache_bytes(c8) - 4) / (kvcache.cache_bytes(c32) - 4)
+    ratio32 = kvcache.cache_bytes(c8) / kvcache.cache_bytes(c32)
     assert ratio32 == pytest.approx((1 + 4 / dh) / 4)
-    ratio16 = (kvcache.cache_bytes(c8) - 4) / (kvcache.cache_bytes(c16) - 4)
+    ratio16 = kvcache.cache_bytes(c8) / kvcache.cache_bytes(c16)
     assert ratio16 == pytest.approx((1 + 4 / dh) / 2)

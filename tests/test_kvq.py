@@ -1,0 +1,267 @@
+"""serve/kvq.py unit coverage: int4 nibble packing, the MUXQ'd int4
+round-trip error bound, the cache-key mode sentinel, page byte accounting
+(int4 == exactly half of int8), calibration collection/pooling, and the
+``kv_calib`` QuantArtifact bundle section round-trip.
+
+Property-based (hypothesis) variants of the round-trip bound live in
+``test_kvq_props.py`` so a missing hypothesis install degrades to skips
+without losing this module's deterministic coverage.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import kvq
+
+
+# ---------------------------------------------------------------------------
+# Nibble packing
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_exact_round_trip_all_values():
+    """Every int4 value in the symmetric grid survives pack -> unpack
+    bit-exactly, in every (low, high) nibble pairing."""
+    grid = np.arange(-kvq.INT4_MAX, kvq.INT4_MAX + 1, dtype=np.int8)
+    lo, hi = np.meshgrid(grid, grid)                     # all 15x15 pairs
+    x = jnp.asarray(np.stack([lo.ravel(), hi.ravel()], axis=-1))  # [225, 2]
+    packed = kvq.pack_int4(x)
+    assert packed.dtype == jnp.int8 and packed.shape == (225, 1)
+    np.testing.assert_array_equal(np.asarray(kvq.unpack_int4(packed)),
+                                  np.asarray(x))
+
+
+def test_pack_int4_halves_last_axis_and_layout():
+    """Half-split layout: byte j = channel j (low nibble) | channel
+    j + dh//2 (high nibble)."""
+    x = jnp.asarray(np.arange(-4, 4, dtype=np.int8))[None]    # [1, 8]
+    p = np.asarray(kvq.pack_int4(x))
+    assert p.shape == (1, 4)
+    for j in range(4):
+        lo = np.int8(np.left_shift(p[0, j], 4)) >> 4           # sign-extend
+        hi = np.int8(p[0, j]) >> 4
+        assert lo == x[0, j] and hi == x[0, j + 4]
+
+
+def test_pack_int4_requires_even_head_dim():
+    with pytest.raises(AssertionError, match="even"):
+        kvq.pack_int4(jnp.zeros((2, 3), jnp.int8))
+
+
+# ---------------------------------------------------------------------------
+# Int4 quantize/dequantize round-trip bound
+# ---------------------------------------------------------------------------
+
+def _int4_bound(x, redist):
+    """The per-element error bound the int4 path promises: half a grid step
+    of the (bf16-rounded) per-(position, head) scale, re-amplified by the
+    channel's redistribution multiplier.  bf16 rounding of the scale is
+    already inside ``s`` (the quantizer divides by the SAME rounded scale),
+    so no extra slack term is needed."""
+    body = np.asarray(x, np.float32) / redist
+    amax = np.maximum(np.max(np.abs(body), axis=-1, keepdims=True), 1e-6)
+    s = np.asarray(jnp.asarray(amax / kvq.INT4_MAX).astype(jnp.bfloat16),
+                   np.float32)
+    return redist * s * 0.5 + 1e-6
+
+
+@pytest.mark.parametrize("calibrated", [False, True])
+def test_int4_round_trip_error_bound(calibrated):
+    rng = np.random.default_rng(0)
+    kvh, dh = 4, 16
+    k = rng.normal(size=(2, 12, kvh, dh)).astype(np.float32)
+    v = rng.normal(size=(2, 12, kvh, dh)).astype(np.float32)
+    # plant genuine outlier channels (the MUXQ motivation: one hot channel
+    # inflates the whole head's abs-max scale)
+    mask = np.zeros((kvh, dh), bool)
+    mask[:, [3, 11]] = True
+    k[..., mask] *= 8.0
+    v[..., mask] *= 8.0
+    redist = kvq.redist_from_mask(mask) if calibrated \
+        else np.ones((kvh, dh), np.float32)
+    q = kvq.Int4KVQuantizer(redist, redist)
+    parts = q.quantize(jnp.asarray(k), jnp.asarray(v))
+    assert parts["k"].shape == (2, 12, kvh, dh // 2)
+    assert parts["k"].dtype == jnp.int8
+    assert parts["k_scale"].dtype == jnp.bfloat16
+    kd, vd = q.dequantize(parts, jnp.float32)
+    for x, xd in ((k, kd), (v, vd)):
+        err = np.abs(np.asarray(xd) - x)
+        assert np.all(err <= _int4_bound(x, redist))
+
+
+def test_int4_calibration_shrinks_inlier_error():
+    """With a planted outlier channel, redistribution shrinks the head's
+    quantization scale by ~2^e — the inlier channels' round-trip error must
+    drop accordingly vs the uncalibrated identity-redist quantizer."""
+    rng = np.random.default_rng(1)
+    kvh, dh = 2, 16
+    x = rng.normal(size=(1, 64, kvh, dh)).astype(np.float32)
+    mask = np.zeros((kvh, dh), bool)
+    mask[:, 0] = True
+    x[..., 0] *= 2.0 ** kvq.DEFAULT_EXP_FACTOR * 4     # one hot channel
+
+    def inlier_mse(redist):
+        q = kvq.Int4KVQuantizer(redist, redist)
+        xd, _ = q.dequantize(q.quantize(jnp.asarray(x), jnp.asarray(x)),
+                             jnp.float32)
+        return float(np.mean((np.asarray(xd) - x)[..., 1:] ** 2))
+
+    plain = inlier_mse(np.ones((kvh, dh), np.float32))
+    calibrated = inlier_mse(kvq.redist_from_mask(mask))
+    assert calibrated < plain / 4          # ~2 bits of scale headroom back
+
+
+def test_int4_zero_vectors_stay_zero():
+    q = kvq.Int4KVQuantizer(np.ones((2, 8), np.float32),
+                            np.ones((2, 8), np.float32))
+    z = jnp.zeros((1, 4, 2, 8), jnp.float32)
+    kd, vd = q.dequantize(q.quantize(z, z), jnp.float32)
+    assert np.all(np.asarray(kd) == 0.0) and np.all(np.asarray(vd) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Mode plumbing: sentinel, factory, byte accounting
+# ---------------------------------------------------------------------------
+
+def test_from_cache_sentinel_convention():
+    fp = {"k": jnp.zeros((1, 2, 2, 4), jnp.bfloat16), "v": jnp.zeros(1)}
+    i8 = dict(fp, k_scale=jnp.zeros(1), v_scale=jnp.zeros(1))
+    i4 = dict(i8, k_redist=jnp.ones((2, 4)), v_redist=jnp.ones((2, 4)))
+    assert kvq.from_cache(fp).mode == "fp"
+    assert kvq.from_cache(i8).mode == "int8"
+    assert kvq.from_cache(i4).mode == "int4"
+
+
+def test_make_quantizer_modes_and_bytes_per_token():
+    kvh, dh = 4, 16
+    q8 = kvq.make_quantizer("int8", kvh=kvh, dh=dh)
+    q4 = kvq.make_quantizer("int4", kvh=kvh, dh=dh)
+    qf = kvq.make_quantizer("fp", kvh=kvh, dh=dh, dtype=jnp.bfloat16)
+    # the tentpole's byte contract: int4 pages cost exactly half of int8
+    assert q4.bytes_per_token(kvh, dh) * 2 == q8.bytes_per_token(kvh, dh)
+    assert qf.bytes_per_token(kvh, dh) == 2 * kvh * dh * 2
+    with pytest.raises(ValueError, match="unknown kv mode"):
+        kvq.make_quantizer("int2", kvh=kvh, dh=dh)
+
+
+def test_make_quantizer_int4_uses_calib_mask():
+    kvh, dh = 2, 8
+    mask = np.zeros((kvh, dh), bool)
+    mask[0, 3] = True
+    calib = {"k_mask": mask, "v_mask": ~mask,
+             "exp_factor": np.asarray(3, np.int32)}
+    q = kvq.make_quantizer("int4", kvh=kvh, dh=dh, calib=calib)
+    assert float(q.k_redist[0, 3]) == 8.0 and float(q.k_redist[0, 0]) == 1.0
+    assert float(q.v_redist[0, 3]) == 1.0 and float(q.v_redist[0, 0]) == 8.0
+    # uncalibrated: identity redistribution
+    q0 = kvq.make_quantizer("int4", kvh=kvh, dh=dh)
+    assert np.all(np.asarray(q0.k_redist) == 1.0)
+
+
+def test_pool_state_stacks_redist_per_layer():
+    q = kvq.Int4KVQuantizer(np.full((2, 4), 2.0, np.float32),
+                            np.ones((2, 4), np.float32))
+    st = q.pool_state(L=3, kvh=2, dh=4)
+    assert st["k_redist"].shape == (3, 2, 4)
+    assert np.all(np.asarray(st["k_redist"]) == 2.0)
+    assert np.all(np.asarray(st["v_redist"]) == 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Calibration: collector + pooled outlier masks
+# ---------------------------------------------------------------------------
+
+def test_collector_running_max_and_layer_order():
+    c = kvq.KVCalibCollector()
+    k1 = np.zeros((1, 2, 2, 4), np.float32)
+    k1[..., 0] = 3.0
+    k2 = np.zeros((1, 2, 2, 4), np.float32)
+    k2[..., 0] = -5.0                       # abs beats the first batch
+    # layers reported out of lexical order on purpose: 10 must sort after 2
+    for prefix in ("layer10/", "layer2/", "layer0/"):
+        c(prefix, k1, k1)
+        c(prefix, k2, k2)
+    k_amax, v_amax = c.stacked()
+    assert k_amax.shape == (3, 2, 4)
+    assert np.all(k_amax[..., 0] == 5.0) and np.all(k_amax[..., 1:] == 0.0)
+    np.testing.assert_array_equal(k_amax, v_amax)
+    # numeric layer order, not lexical: layer0, layer2, layer10
+    assert sorted(c.k_amax, key=kvq._layer_sort_key) == \
+        ["layer0/", "layer2/", "layer10/"]
+
+
+def test_collector_ignores_non_selfattn_shapes_and_empty():
+    c = kvq.KVCalibCollector()
+    assert c.stacked() is None
+    c("layer0/", np.zeros((2, 3)), np.zeros((2, 3)))   # not [b, s, kvh, dh]
+    assert c.stacked() is None
+
+
+def test_pool_outlier_mask_unions_across_layers():
+    L, kvh, dh = 3, 2, 16
+    amax = np.ones((L, kvh, dh), np.float32)
+    amax[0, 0, 2] = 100.0                   # layer 0 flags channel 2, head 0
+    amax[2, 0, 9] = 100.0                   # layer 2 flags channel 9, head 0
+    amax[1, 1, 5] = 100.0                   # head 1 only ever flags channel 5
+    mask = kvq.pool_outlier_mask(amax)
+    assert set(np.flatnonzero(mask[0])) == {2, 9}      # union over layers
+    assert set(np.flatnonzero(mask[1])) == {5}         # heads stay separate
+
+
+def test_pool_outlier_mask_caps_at_max_frac():
+    amax = np.ones((1, 1, 16), np.float32)
+    # 6 candidate outliers (a minority, so the head median stays ~1)
+    amax[0, 0, :6] = 1000 + np.arange(6)
+    mask = kvq.pool_outlier_mask(amax, max_frac=0.25)
+    assert mask.sum() == 4                  # capped at 25% of head_dim ...
+    assert set(np.flatnonzero(mask[0])) == {2, 3, 4, 5}  # ... top-k by amax
+
+
+def test_build_kv_calib_shapes_and_empty():
+    c = kvq.KVCalibCollector()
+    assert kvq.build_kv_calib(c) is None
+    rng = np.random.default_rng(2)
+    for layer in range(2):
+        x = rng.normal(size=(1, 4, 2, 8)).astype(np.float32)
+        c(f"layer{layer}/", x, x)
+    calib = kvq.build_kv_calib(c, exp_factor=3)
+    assert calib["k_amax"].shape == (2, 2, 8)
+    assert calib["k_mask"].shape == (2, 8) and calib["k_mask"].dtype == bool
+    assert int(calib["exp_factor"]) == 3
+
+
+# ---------------------------------------------------------------------------
+# kv_calib rides the QuantArtifact bundle
+# ---------------------------------------------------------------------------
+
+def test_kv_calib_rides_artifact_save_load(tmp_path):
+    from repro.configs import get_config
+    from repro.core.muxq import QuantConfig
+    from repro.core.policy import SitePolicy
+    from repro.models import transformer as T
+    from repro.quantize import QuantArtifact, quantize_model
+
+    cfg = get_config("gpt2-small", reduced=True).replace(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+        vocab_size=64)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": rng.integers(0, cfg.vocab_size, (2, 8))}
+               for _ in range(2)]
+    spec = QuantConfig(method="muxq", outlier_mode="static",
+                       act_granularity="per_token")
+    art = quantize_model(cfg, params, batches, SitePolicy.uniform(spec))
+    # calibration ran -> the kv_calib section exists with per-layer stats
+    assert set(art.kv_calib) >= {"k_amax", "v_amax", "k_mask", "v_mask",
+                                 "exp_factor"}
+    assert art.kv_calib["k_amax"].shape == (2, cfg.n_kv_heads, cfg.head_dim)
+    path = art.save(tmp_path / "bundle")
+    loaded = QuantArtifact.load(path)
+    for key, val in art.kv_calib.items():
+        np.testing.assert_array_equal(np.asarray(loaded.kv_calib[key]),
+                                      np.asarray(val))
+    # the observer must not leak past quantize_model: a jit'd forward after
+    # calibration would explode on a tracer-called observer otherwise
+    from repro.models import attention as A
+    assert A._KV_OBSERVER is None

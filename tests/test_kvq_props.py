@@ -1,0 +1,67 @@
+"""Property tests for the int4 KV page math (serve/kvq.py).
+
+Follows the repo's optional-dev-dep contract (see tests/conftest.py): a
+missing hypothesis install skips this module; the deterministic coverage
+for the same paths lives in ``test_kvq.py``.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.serve import kvq
+
+settings.register_profile("ci", deadline=None, max_examples=30)
+settings.load_profile("ci")
+
+
+@st.composite
+def _kv_case(draw):
+    """Random K/V block + outlier mask + exponent, over varied shapes and
+    dynamic ranges (including planted outlier channels)."""
+    kvh = draw(st.integers(1, 4))
+    dh = draw(st.sampled_from([4, 8, 16, 32]))
+    s = draw(st.integers(1, 8))
+    seed = draw(st.integers(0, 2**31 - 1))
+    log_scale = draw(st.floats(-4.0, 4.0))
+    n_out = draw(st.integers(0, dh // 2))
+    e = draw(st.integers(0, 3))
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(1, s, kvh, dh)).astype(np.float32) * 10.0 ** log_scale
+    mask = np.zeros((kvh, dh), bool)
+    cols = rng.choice(dh, size=n_out, replace=False)
+    mask[:, cols] = True
+    x[..., cols] *= 2.0 ** e * 2            # genuinely hot channels
+    return x, mask, e
+
+
+@given(_kv_case())
+def test_int4_round_trip_half_lsb_bound(case):
+    """Quantize -> pack -> unpack -> dequantize error never exceeds half a
+    grid step of the bf16-rounded per-(position, head) scale, re-amplified
+    by each channel's redistribution multiplier."""
+    x, mask, e = case
+    redist = kvq.redist_from_mask(mask, e)
+    q = kvq.Int4KVQuantizer(redist, redist)
+    parts = q.quantize(jnp.asarray(x), jnp.asarray(x))
+    kd, vd = q.dequantize(parts, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(vd))
+    body = x / redist
+    amax = np.maximum(np.max(np.abs(body), axis=-1, keepdims=True), 1e-6)
+    s = np.asarray(jnp.asarray(amax / kvq.INT4_MAX).astype(jnp.bfloat16),
+                   np.float32)
+    bound = redist * s * 0.5 + 1e-6 * redist
+    assert np.all(np.abs(np.asarray(kd) - x) <= bound)
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 4, 8, 16, 32, 64]))
+def test_pack_unpack_is_identity_on_int4_grid(seed, dh):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(-kvq.INT4_MAX, kvq.INT4_MAX + 1,
+                                 (3, 5, dh)), dtype=jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(kvq.unpack_int4(kvq.pack_int4(x))), np.asarray(x))

@@ -93,6 +93,20 @@ def test_pool_flags_reach_engine_unmangled(stubbed):
     assert kw["s_max"] == 256
 
 
+def test_kv_mode_int4_reaches_engine(stubbed):
+    # quantized path: the artifact (carrying kv_calib) is the params arg and
+    # the int4 page mode reaches the engine unmangled
+    eng = _engine_kw(["--quant", "muxq", "--kv-mode", "int4"], stubbed)
+    assert eng.kw["kv_mode"] == "int4"
+    assert eng.params == "ARTIFACT"
+
+
+def test_kv_mode_int4_fp_weights(stubbed):
+    # int4 pages are opt-in and independent of the weight path
+    eng = _engine_kw(["--quant", "fp", "--kv-mode", "int4"], stubbed)
+    assert eng.kw["kv_mode"] == "int4"
+
+
 def test_quantized_path_passes_artifact_and_backend(stubbed):
     eng = _engine_kw(["--quant", "muxq", "--backend", "fused",
                       "--kv-mode", "fp"], stubbed)

@@ -14,8 +14,8 @@ Acceptance criteria covered here:
     splits a shared tail page before either sibling writes into it;
     preemption/free with refcounted pages never corrupts the sibling;
   * the Pallas paged-attention decode kernel (interpret mode) matches the
-    jnp gather reference on fp and int8 pages, with sliding windows and
-    logit softcap.
+    jnp gather reference on fp, int8 and int4 (nibble-packed + redistributed)
+    pages, with sliding windows and logit softcap, under GQA (h > kvh).
 """
 import jax
 import jax.numpy as jnp
@@ -294,41 +294,64 @@ def test_share_detection_prefers_longest_prefix(small_model):
 # ---------------------------------------------------------------------------
 
 def _random_paged_case(seed, *, b=3, h=8, kvh=4, dh=16, ps=8, pages=4,
-                       int8=False):
+                       mode="fp"):
+    """Random paged-attention operands for one page mode.  Returns
+    ``(q, k_pages, v_pages, kw, table, pos)`` where ``kw`` carries the
+    mode's scale/redistribution operands (h > kvh exercises GQA)."""
+    from repro.serve import kvq
+
     rng = np.random.default_rng(seed)
     n_pages = 1 + b * pages                           # + scratch page 0
     q = jnp.asarray(rng.normal(size=(b, h, dh)).astype(np.float32))
-    if int8:
+    kw = {}
+    if mode == "int8":
         kp = jnp.asarray(rng.integers(-127, 128, (n_pages, ps, kvh, dh)),
                          dtype=jnp.int8)
         vp = jnp.asarray(rng.integers(-127, 128, (n_pages, ps, kvh, dh)),
                          dtype=jnp.int8)
-        ks = jnp.asarray(rng.uniform(1e-3, 2e-2, (n_pages, ps, kvh, 1))
-                         .astype(np.float32))
-        vs = jnp.asarray(rng.uniform(1e-3, 2e-2, (n_pages, ps, kvh, 1))
-                         .astype(np.float32))
+        kw["k_scale"] = jnp.asarray(rng.uniform(1e-3, 2e-2,
+                                                (n_pages, ps, kvh, 1))
+                                    .astype(np.float32))
+        kw["v_scale"] = jnp.asarray(rng.uniform(1e-3, 2e-2,
+                                                (n_pages, ps, kvh, 1))
+                                    .astype(np.float32))
+    elif mode == "int4":
+        ki = rng.integers(-7, 8, (n_pages, ps, kvh, dh)).astype(np.int8)
+        vi = rng.integers(-7, 8, (n_pages, ps, kvh, dh)).astype(np.int8)
+        kp = kvq.pack_int4(jnp.asarray(ki))          # [..., dh//2] nibbles
+        vp = kvq.pack_int4(jnp.asarray(vi))
+        kw["k_scale"] = jnp.asarray(rng.uniform(1e-3, 2e-2,
+                                                (n_pages, ps, kvh, 1))
+                                    .astype(np.float32)).astype(jnp.bfloat16)
+        kw["v_scale"] = jnp.asarray(rng.uniform(1e-3, 2e-2,
+                                                (n_pages, ps, kvh, 1))
+                                    .astype(np.float32)).astype(jnp.bfloat16)
+        # per-head inverse redistribution rows: a few 2^e channels per head
+        mask = rng.random((kvh, dh)) < 0.2
+        kw["k_redist"] = jnp.asarray(kvq.redist_from_mask(mask))
+        kw["v_redist"] = jnp.asarray(kvq.redist_from_mask(~mask & (
+            rng.random((kvh, dh)) < 0.2)))
     else:
         kp = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh))
                          .astype(np.float32))
         vp = jnp.asarray(rng.normal(size=(n_pages, ps, kvh, dh))
                          .astype(np.float32))
-        ks = vs = None
     # distinct physical pages per slot, scrambled
     table = np.zeros((b, pages), np.int32)
     perm = rng.permutation(np.arange(1, n_pages))
     for i in range(b):
         table[i] = perm[i * pages:(i + 1) * pages]
     pos = jnp.asarray(rng.integers(0, pages * ps, b), dtype=jnp.int32)
-    return q, kp, vp, ks, vs, jnp.asarray(table), pos
+    return q, kp, vp, kw, jnp.asarray(table), pos
 
 
-@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("mode", ["fp", "int8", "int4"])
 @pytest.mark.parametrize("window,softcap", [(None, None), (5, None),
                                             (None, 30.0), (7, 50.0)])
-def test_paged_kernel_interpret_matches_ref(int8, window, softcap):
-    q, kp, vp, ks, vs, table, pos = _random_paged_case(
-        0 if not int8 else 1, int8=int8)
-    kw = dict(k_scale=ks, v_scale=vs, window=window, softcap=softcap)
+def test_paged_kernel_interpret_matches_ref(mode, window, softcap):
+    seed = {"fp": 0, "int8": 1, "int4": 3}[mode]
+    q, kp, vp, kw, table, pos = _random_paged_case(seed, mode=mode)
+    kw = dict(kw, window=window, softcap=softcap)
     ref = PA.paged_attention_ref(q, kp, vp, table, pos, **kw)
     out = PA.paged_attention_pallas(q, kp, vp, table, pos, interpret=True,
                                     **kw)
@@ -339,7 +362,7 @@ def test_paged_kernel_interpret_matches_ref(int8, window, softcap):
 def test_paged_kernel_respects_page_table_indirection():
     """Swapping two physical pages while swapping the table entries leaves
     the output invariant — the kernel really reads through the table."""
-    q, kp, vp, _, _, table, pos = _random_paged_case(2)
+    q, kp, vp, _, table, pos = _random_paged_case(2)
     ref = PA.paged_attention_ref(q, kp, vp, table, pos)
     a, b_ = int(table[0, 0]), int(table[0, 1])
     swap = jnp.asarray([a, b_])
@@ -355,10 +378,11 @@ def test_paged_kernel_respects_page_table_indirection():
 def test_attention_decode_paged_interpret_impl(small_model):
     """The model-level paged decode step under set_paged_impl('interpret')
     (Pallas in-kernel gather + dequant) matches the ref gather within
-    float tolerance, int8 and fp pages."""
+    float tolerance, fp / int8 / int4 pages (int4 exercises the in-kernel
+    nibble unpack + inverse redistribution)."""
     cfg, params, _ = small_model
     from repro.data import tokenizer as tok
-    for kv_mode in ("fp", "int8"):
+    for kv_mode in ("fp", "int8", "int4"):
         eng = ServeEngine(cfg, params, max_batch=2, s_max=32, page_size=8,
                           kv_mode=kv_mode, cache_dtype=jnp.float32)
         ids = tok.encode("abcdefghij")
