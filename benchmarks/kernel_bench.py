@@ -81,6 +81,36 @@ def run(emit=True):
     rows.append((f"kernel/muxq_dispatch_fused_{m}x{k}x{n}", us,
                  f"gflops={flops / us / 1e3:.2f}"))
 
+    # paged-attention query blocks (the [slot, sq] kernel generalization):
+    # timed on the jnp gather reference like everything above — interpret
+    # Pallas is a parity tool, not a perf number.  The verify row prices a
+    # k-token speculative verify block against the k sequential decode
+    # steps it replaces; the prefill row prices one chunked-prefill read
+    # through the page table.
+    from repro.kernels import paged_attention as PA
+    kvh, dh, ps, npg = 4, 64, 16, 16
+    rng = jax.random.PRNGKey(2)
+    kp = jax.random.normal(rng, (npg, ps, kvh, dh))
+    vp = jax.random.normal(jax.random.PRNGKey(3), (npg, ps, kvh, dh))
+    bsl, pages = 4, 4                                  # 4 slots x 4 pages
+    tab = jnp.arange(bsl * pages, dtype=jnp.int32).reshape(bsl, pages)
+    pos = jnp.full((bsl,), pages * ps - 8, jnp.int32)
+    f_pa = jax.jit(PA.paged_attention_ref)
+    q1 = jax.random.normal(jax.random.PRNGKey(4), (bsl, kvh, dh))
+    us1 = _time(f_pa, q1, kp, vp, tab, pos)
+    sk = 4
+    qk = jax.random.normal(jax.random.PRNGKey(5), (bsl, sk, kvh, dh))
+    usk = _time(f_pa, qk, kp, vp, tab, pos)
+    rows.append((f"kernel/paged_verify_k{sk}_b{bsl}", usk,
+                 f"vs_{sk}_decode_steps={sk * us1:.1f}us"
+                 f"_block_speedup=x{sk * us1 / usk:.2f}"))
+    chunk = 64
+    qc = jax.random.normal(jax.random.PRNGKey(6), (1, chunk, kvh, dh))
+    tab1 = jnp.arange(pages, dtype=jnp.int32)[None]
+    usc = _time(f_pa, qc, kp, vp, tab1, jnp.zeros((1,), jnp.int32))
+    rows.append((f"kernel/paged_prefill_chunk{chunk}", usc,
+                 f"us_per_token={usc / chunk:.2f}"))
+
     # analytic TPU-target speedup of the MUXQ path (uniform int8 on MXU)
     rows.append(("kernel/tpu_int8_speedup_analytic", 0.0,
                  f"x{PEAK_INT8 / PEAK_BF16:.1f}_over_bf16"))

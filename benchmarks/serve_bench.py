@@ -26,6 +26,11 @@ read traffic vs int8 pages (``read_ratio <= 0.55`` over identical decode
 trajectories), that a fixed pool byte budget holds ~2x the concurrent
 prompts (``live_slots_peak`` ratio >= 1.8), and that one paged decode
 step's logits on int4 pages stay within ``INT4_QUALITY_RTOL`` of fp pages.
+A **repetitive-text spec case** compares ``spec_mode='ngram'`` against
+plain decode on the same workload and gates the deterministic counters:
+output token streams bit-identical, acceptance > 0, >= 25% fewer pooled
+decode steps, and verify traces bounded by the (k bucket, page bucket)
+grid — wall clock is reported for trajectory, never gated.
 
 CLI:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
@@ -222,6 +227,68 @@ def run_flood(*, smoke: bool = True, prefill_chunk: int = 16,
 
 
 # ---------------------------------------------------------------------------
+# Self-speculative decoding: n-gram drafts + batched paged verify
+# ---------------------------------------------------------------------------
+
+def _spec_workload(max_new: int):
+    """Repetitive-text prompts — the workload prompt-lookup drafting
+    exists for.  A greedy LM falls into short argmax cycles on text like
+    this, so the n-gram proposer's continuations keep agreeing with the
+    verify argmax and the acceptance rate stays high."""
+    from repro.serve.engine import Request
+
+    prompts = [
+        "the pool maps pages the pool maps pages the pool maps pages",
+        "a b a b a b a b a b a b a b a b",
+        "tick tock tick tock tick tock tick tock tick tock",
+        "one two one two one two one two one two one two",
+    ]
+    return [Request(p, max_new_tokens=max_new) for p in prompts]
+
+
+def run_spec(*, spec_k: int = 8, max_new: int = 96) -> dict:
+    """The spec-decoding comparison: the SAME repetitive workload through
+    ``spec_mode='off'`` and ``'ngram'`` engines (fp pages, fp32 cache —
+    greedy argmax is bit-deterministic, so acceptance is exact bookkeeping,
+    not luck).  Returns both reports plus the gate numbers:
+
+      * ``outputs_equal`` — every request's token stream identical on/off
+        (greedy longest-agreeing-prefix acceptance is lossless);
+      * ``step_ratio``    — pooled decode steps ngram / off (accepted
+        drafts retire several slot tokens per verify step);
+      * ``verify_traces`` / ``verify_buckets_seen`` — the k-token verify
+        compiles once per (k bucket, page bucket) pair at most.
+
+    Wall clock rides along in each report (``elapsed_s``) for trajectory;
+    on this CPU container the step-count ratio is the tracked signal.
+    """
+    import jax.numpy as jnp
+    from repro.serve.engine import ServeEngine
+
+    cfg, params = _model(True)
+    out, reps, streams = {}, {}, {}
+    for mode in ("off", "ngram"):
+        eng = ServeEngine(cfg, params, max_batch=4, s_max=128, page_size=8,
+                          kv_mode="fp", cache_dtype=jnp.float32,
+                          spec_mode=mode, spec_k=spec_k)
+        reqs = _spec_workload(max_new)
+        eng.generate(reqs)
+        assert all(r.done for r in reqs)
+        rep = eng.metrics.report()
+        streams[mode] = [list(r.out_tokens) for r in reqs]
+        if mode == "ngram":
+            rep["verify_traces"] = eng.verify_traces
+            rep["verify_buckets_seen"] = sorted(eng.verify_buckets)
+        reps[mode] = rep
+        out[f"spec/{mode}"] = rep
+    out["outputs_equal"] = streams["ngram"] == streams["off"]
+    out["step_ratio"] = (reps["ngram"]["decode_steps"]
+                         / reps["off"]["decode_steps"])
+    out["spec_k"] = spec_k
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Int4 KV pages: byte halving, concurrency at fixed pool bytes, quality
 # ---------------------------------------------------------------------------
 
@@ -386,6 +453,9 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-prefill token budget for the flood case "
                          "(the baseline run uses one whole-prompt chunk)")
+    ap.add_argument("--spec-k", type=int, default=8,
+                    help="speculative block width for the repetitive-text "
+                         "spec case (1 committed + spec-k - 1 drafted)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=str(JSON_OUT))
     args = ap.parse_args(argv)
@@ -443,6 +513,32 @@ def main(argv=None) -> int:
         assert flood_c["prefill_traces"] <= (
             len({c for c, _ in flood_c["prefill_buckets_seen"]})
             * len({p for _, p in flood_c["prefill_buckets_seen"]})), flood_c
+    # self-speculative decoding on repetitive text: n-gram drafts + the
+    # batched k-token verify step vs plain one-token decode (always on the
+    # tiny smoke model; the step-count ratio is deterministic)
+    spec = run_spec(spec_k=args.spec_k)
+    results["spec/compare"] = spec
+    ng = spec["spec/ngram"]
+    common.emit([("serve/spec_ngram", 0.0,
+                  f"step_ratio={spec['step_ratio']:.3f}"
+                  f"_acceptance={ng['spec_acceptance']:.2f}"
+                  f"_saved={ng['decode_steps_saved']}"
+                  f"_wall_s={ng['elapsed_s']:.2f}")])
+    if args.smoke:
+        # CI gates for the self-speculative decoding tentpole:
+        # 1. lossless: greedy acceptance reproduces the exact spec-off
+        #    token streams (fp pages + fp32 cache → bit-determinism)
+        assert spec["outputs_equal"], "spec decoding changed output tokens"
+        # 2. drafting engaged and paid off on repetitive text: the
+        #    workload finishes in >= 25% fewer pooled decode steps
+        assert ng["spec_proposed"] > 0 and ng["spec_accepted"] > 0, ng
+        assert ng["spec_acceptance"] > 0, ng
+        assert spec["step_ratio"] <= 0.75, spec["step_ratio"]
+        # 3. the k-token verify compiles once per (k, page) bucket pair
+        #    at most — pow2 bucketing bounds trace count, not workload size
+        assert ng["verify_traces"] <= (
+            len({k for k, _ in ng["verify_buckets_seen"]})
+            * len({p for _, p in ng["verify_buckets_seen"]})), ng
     # int4 page-mode comparison: byte halving, concurrency at fixed pool
     # bytes, decode quality vs fp pages (always on the tiny smoke model —
     # the ratios are structural, not throughput)
@@ -487,7 +583,7 @@ def main(argv=None) -> int:
         "smoke": args.smoke, "n_requests": n_requests, "rate": args.rate,
         "max_batch": args.max_batch, "s_max": s_max,
         "page_size": args.page_size, "prefill_chunk": args.prefill_chunk,
-        "seed": args.seed,
+        "spec_k": args.spec_k, "seed": args.seed,
     }
     out = Path(args.json_out)
     out.parent.mkdir(parents=True, exist_ok=True)

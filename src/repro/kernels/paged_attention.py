@@ -1,18 +1,28 @@
-"""Pallas TPU kernel: paged-attention decode (vLLM-style block-sparse KV).
+"""Pallas TPU kernel: paged attention over block-sparse KV (vLLM-style).
 
-One decode step of the serving pool reads each slot's K/V *through its page
-table*: the kernel never materializes the gathered ``[b, pages*ps, ...]``
-key range that the jnp reference builds — page ids ride a scalar-prefetch
-page table straight into the BlockSpec index maps, so the grid's innermost
-dimension streams one physical page per step from HBM and accumulates
-flash-attention-style (running max / denominator / un-normalized
-accumulator in VMEM scratch).  INT8 pages are dequantized in-kernel from
-their per-(position, head) scales — the int8 bytes are what crosses HBM.
-INT4 pages (MUXQ'd KV, ``repro.serve.kvq``) go further: the kernel unpacks
-two nibbles per byte, applies the per-(position, head) scale AND the
-per-head inverse magnitude-redistribution rows (``k_redist``/``v_redist``
-[kvh, dh]: 2^e on calibrated outlier channels) — so the *packed* int4
-bytes are what crosses HBM, half the int8 traffic.
+One traced step of the serving pool reads each slot's K/V *through its
+page table*: the kernel never materializes the gathered ``[b, pages*ps,
+...]`` key range that the jnp reference builds — page ids ride a
+scalar-prefetch page table straight into the BlockSpec index maps, so the
+grid's innermost dimension streams one physical page per step from HBM
+and accumulates flash-attention-style (running max / denominator /
+un-normalized accumulator in VMEM scratch).  INT8 pages are dequantized
+in-kernel from their per-(position, head) scales — the int8 bytes are
+what crosses HBM.  INT4 pages (MUXQ'd KV, ``repro.serve.kvq``) go
+further: the kernel unpacks two nibbles per byte, applies the
+per-(position, head) scale AND the per-head inverse
+magnitude-redistribution rows (``k_redist``/``v_redist`` [kvh, dh]: 2^e
+on calibrated outlier channels) — so the *packed* int4 bytes are what
+crosses HBM, half the int8 traffic.
+
+The query side is a ``[slot, sq]`` BLOCK, not a single token:
+
+  * decode           — sq=1, ``pos[b]`` the slot's write position;
+  * speculative verify — sq=k draft tokens per slot, query row ``i`` sits
+    at absolute position ``pos[b] + i`` (the per-row causal mask admits
+    exactly the keys a sequential decode at that position would see);
+  * chunked prefill  — b=1, sq=C chunk queries with ``pos=[start]``, the
+    flash-style replacement for the gather→dequantize→sdpa read.
 
 The page table arrives pre-sliced to the scheduler's bucketed page budget
 (``pages`` = table.shape[1]), so read traffic scales with the longest live
@@ -27,8 +37,8 @@ Execution selection mirrors ``repro.kernels.dispatch``:
                     full-range gather the serve tests pin against).
 
 GQA rides in the grid: programs iterate (slot, kv_head, page) and each
-program attends all ``h // kvh`` query heads of its group at once, so the
-broadcast KV never materializes (same trick as ``flash_attention``).
+program attends all ``sq * h // kvh`` query rows of its group at once, so
+the broadcast KV never materializes (same trick as ``flash_attention``).
 """
 from __future__ import annotations
 
@@ -51,7 +61,7 @@ _PAGED_IMPL: PagedImpl = "auto"
 
 
 def set_paged_impl(impl: PagedImpl) -> PagedImpl:
-    """Select how paged-attention decode executes; returns the previous
+    """Select how paged attention executes; returns the previous
     setting.  ``auto`` (default): compiled Pallas on TPU, the jnp gather
     reference on CPU.  ``interpret`` forces interpret-mode Pallas (CPU
     parity tests), ``ref`` forces the reference, ``pallas`` forces
@@ -78,19 +88,24 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
                         k_scale=None, v_scale=None, k_redist=None,
                         v_redist=None, window=None,
                         softcap: Optional[float] = None):
-    """Gather-then-attend reference.  q [b, h, dh]; k/v_pages
+    """Gather-then-attend reference.  q [b, h, dh] (decode) or
+    [b, sq, h, dh] (verify block / prefill chunk); k/v_pages
     [n_pages, ps, kvh, dh] (+ optional [n_pages, ps, kvh, 1] int8 scales;
     int4 pages store nibble-packed [n_pages, ps, kvh, dh//2] with bf16
     scales and per-head [kvh, dh] ``k_redist``/``v_redist`` inverse
-    redistribution rows); page_table [b, pages] int32; pos [b] int32;
-    ``window`` a traced or static int32 scalar (``NO_WINDOW`` disables).
-    Returns [b, h, dh].
+    redistribution rows); page_table [b, pages] int32; pos [b] int32 —
+    the absolute position of each slot's FIRST query row (query row i
+    masks ``kpos <= pos[b] + i``); ``window`` a traced or static int32
+    scalar (``NO_WINDOW`` disables).  Returns q's shape.
 
     The op sequence mirrors ``models.attention.sdpa`` exactly — including
-    the singleton query-sequence dim riding through the grouped einsums —
-    so fp pages stay BIT-exact against the dense cache decode path (the
-    serve parity tests pin this)."""
-    b, h, dh = q.shape
+    the query-sequence dim riding through the grouped einsums — so fp
+    pages stay BIT-exact against the dense cache decode/prefill paths
+    (the serve parity tests pin this)."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]                                # [b, 1, h, dh]
+    b, sq, h, dh = q.shape
     kvh = k_pages.shape[2]
     g = h // kvh
 
@@ -113,20 +128,22 @@ def paged_attention_ref(q, k_pages, v_pages, page_table, pos, *,
         vv = vv.astype(q.dtype)
 
     window = NO_WINDOW if window is None else window
-    kpos = jnp.arange(kk.shape[1])[None, :]           # [1, P*ps]
-    allow = (kpos <= pos[:, None]) & (kpos > pos[:, None] - window)
-    bias = jnp.where(allow, 0.0, NEG_INF)[:, None, None, :].astype(jnp.float32)
+    kpos = jnp.arange(kk.shape[1])[None, None, :]     # [1, 1, P*ps]
+    qpos = pos[:, None, None] + jnp.arange(sq)[None, :, None]   # [b, sq, 1]
+    allow = (kpos <= qpos) & (kpos > qpos - window)
+    bias = jnp.where(allow, 0.0, NEG_INF)[:, None, None].astype(jnp.float32)
 
-    qg = q.reshape(b, 1, kvh, g, dh)                  # [b, sq=1, kv, g, dh]
+    qg = q.reshape(b, sq, kvh, g, dh)                 # [b, sq, kv, g, dh]
     scale = dh ** -0.5
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, kk).astype(jnp.float32) * scale
     if softcap is not None:
         scores = (softcap * jnp.tanh(scores.astype(jnp.float32) / softcap)
                   ).astype(scores.dtype)
-    scores = scores + bias[:, :, None]                # group-dim broadcast
+    scores = scores + bias                            # [b,1,1,sq,S] bcast
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, vv)
-    return out.reshape(b, h, dh)
+    out = out.reshape(b, sq, h, dh)
+    return out[:, 0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -137,7 +154,7 @@ def _kernel(tab_ref, pos_ref, win_ref,              # scalar prefetch
             q_ref, k_ref, v_ref, ks_ref, vs_ref,    # blocks (scales opt.)
             kr_ref, vr_ref,                         # int4 redist rows (opt.)
             o_ref, m_ref, l_ref, acc_ref, *,
-            scale: float, nj: int, ps: int, mode: str,
+            scale: float, nj: int, ps: int, g: int, mode: str,
             softcap: Optional[float]):
     bb, j = pl.program_id(0), pl.program_id(2)
 
@@ -147,7 +164,7 @@ def _kernel(tab_ref, pos_ref, win_ref,              # scalar prefetch
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0, 0].astype(jnp.float32)               # [g, dh]
+    q = q_ref[0, 0].astype(jnp.float32)               # [sq*g, dh]
     k = k_ref[0, :, 0]                                # [ps, dh | dh//2]
     v = v_ref[0, :, 0]
     if mode == "int4":
@@ -170,18 +187,22 @@ def _kernel(tab_ref, pos_ref, win_ref,              # scalar prefetch
     if softcap is not None:
         s = softcap * jnp.tanh(s / softcap)
 
-    # logical key positions of page j: [j*ps, (j+1)*ps)
+    # logical key positions of page j: [j*ps, (j+1)*ps).  Query row r of
+    # the [sq*g] block sits at absolute position pos[bb] + r//g — the
+    # per-row causal mask that makes one kernel serve decode (sq=1),
+    # speculative verify (sq=k) and chunked prefill (sq=C, pos=start).
     pos = pos_ref[bb]
     win = win_ref[0]
-    g = q.shape[0]
-    kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (g, ps), 1)
-    allow = (kpos <= pos) & (kpos > pos - win)
+    rows = q.shape[0]                                 # sq * g
+    kpos = j * ps + jax.lax.broadcasted_iota(jnp.int32, (rows, ps), 1)
+    qpos = pos + jax.lax.broadcasted_iota(jnp.int32, (rows, ps), 0) // g
+    allow = (kpos <= qpos) & (kpos > qpos - win)
     s = jnp.where(allow, s, NEG_INF)
 
-    m_prev = m_ref[...]                               # [g, 1]
+    m_prev = m_ref[...]                               # [sq*g, 1]
     m_cur = jnp.max(s, axis=1, keepdims=True)
     m_new = jnp.maximum(m_prev, m_cur)
-    p = jnp.exp(s - m_new)                            # [g, ps]
+    p = jnp.exp(s - m_new)                            # [sq*g, ps]
     alpha = jnp.exp(m_prev - m_new)
     l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
     acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
@@ -199,13 +220,20 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
                            v_redist=None, window=None,
                            softcap: Optional[float] = None,
                            interpret: bool = False):
-    """Pallas paged-attention decode.  Same contract as
-    :func:`paged_attention_ref`; the page table and per-slot positions ride
-    scalar prefetch so the K/V BlockSpec index maps load physical pages
-    directly (no gathered intermediate).  Int4 pages arrive nibble-packed
-    (last dim dh//2) with [kvh, dh] redistribution rows; the kernel block
-    loads one page of *packed* bytes and dequantizes in VMEM."""
-    b, h, dh = q.shape
+    """Pallas paged attention.  Same contract as
+    :func:`paged_attention_ref`; the page table and per-slot start
+    positions ride scalar prefetch so the K/V BlockSpec index maps load
+    physical pages directly (no gathered intermediate).  The whole
+    ``[sq, g]`` query block of a (slot, kv-head) program attends one page
+    per grid step with online softmax, so the verify block (sq=k) and the
+    chunked-prefill read (sq=C) cost ONE pass over the key pages — not sq
+    passes.  Int4 pages arrive nibble-packed (last dim dh//2) with
+    [kvh, dh] redistribution rows; the kernel block loads one page of
+    *packed* bytes and dequantizes in VMEM."""
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    b, sq, h, dh = q.shape
     n_pages, ps, kvh, pk_dh = k_pages.shape
     assert h % kvh == 0
     g = h // kvh
@@ -218,7 +246,9 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
     table = page_table.astype(jnp.int32)
     pos32 = pos.astype(jnp.int32)
     win = jnp.full((1,), NO_WINDOW if window is None else window, jnp.int32)
-    qg = q.reshape(b, kvh, g, dh)
+    # [b, kvh, sq*g, dh]: all of a kv head's query rows in one block
+    qg = q.reshape(b, sq, kvh, g, dh).transpose(0, 2, 1, 3, 4)
+    qg = qg.reshape(b, kvh, sq * g, dh)
 
     # page blocks: physical page tab[b, j], kv head hh, all ps positions
     kv_spec = pl.BlockSpec(
@@ -228,7 +258,8 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
         (1, ps, 1, 1),
         lambda bb, hh, j, tab, pos_r, win_r: (tab[bb, j], 0, hh, 0))
     q_spec = pl.BlockSpec(
-        (1, 1, g, dh), lambda bb, hh, j, tab, pos_r, win_r: (bb, hh, 0, 0))
+        (1, 1, sq * g, dh),
+        lambda bb, hh, j, tab, pos_r, win_r: (bb, hh, 0, 0))
     # inert placeholder for operands a mode doesn't use (uniform signature)
     def _inert_spec():
         return pl.BlockSpec((1, 1),
@@ -259,19 +290,22 @@ def paged_attention_pallas(q, k_pages, v_pages, page_table, pos, *,
         grid=(b, kvh, nj),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
-            (1, 1, g, dh), lambda bb, hh, j, tab, pos_r, win_r: (bb, hh, 0, 0)),
-        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
-                        pltpu.VMEM((g, 1), jnp.float32),
-                        pltpu.VMEM((g, dh), jnp.float32)],
+            (1, 1, sq * g, dh),
+            lambda bb, hh, j, tab, pos_r, win_r: (bb, hh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((sq * g, 1), jnp.float32),
+                        pltpu.VMEM((sq * g, 1), jnp.float32),
+                        pltpu.VMEM((sq * g, dh), jnp.float32)],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=scale, nj=nj, ps=ps, mode=mode,
+        functools.partial(_kernel, scale=scale, nj=nj, ps=ps, g=g, mode=mode,
                           softcap=softcap),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, sq * g, dh), q.dtype),
         interpret=interpret,
     )(table, pos32, win, *args)
-    return out.reshape(b, h, dh)
+    out = out.reshape(b, kvh, sq, g, dh).transpose(0, 2, 1, 3, 4)
+    out = out.reshape(b, sq, h, dh)
+    return out[:, 0] if squeeze else out
 
 
 def paged_attention_decode(q, k_pages, v_pages, page_table, pos, *,
@@ -279,7 +313,9 @@ def paged_attention_decode(q, k_pages, v_pages, page_table, pos, *,
                            v_redist=None, window=None,
                            softcap: Optional[float] = None,
                            impl: Optional[str] = None):
-    """Impl-dispatching entry point (see :func:`set_paged_impl`)."""
+    """Impl-dispatching entry point (see :func:`set_paged_impl`).  q may
+    be [b, h, dh] (decode) or [b, sq, h, dh] (verify block / prefill
+    chunk, with ``pos`` the first query row's absolute position)."""
     if impl in (None, "auto"):
         impl = paged_impl()
     if impl == "ref":

@@ -43,6 +43,16 @@ def main(argv=None) -> int:
                     help="per-step prompt-token budget: prompts prefill "
                          "into pool pages at most this many tokens per "
                          "step, interleaved with the pooled decode")
+    ap.add_argument("--spec-mode", default="off", choices=["off", "ngram"],
+                    help="self-speculative decoding: 'ngram' drafts tokens "
+                         "by prompt-lookup over each slot's own history and "
+                         "verifies every slot's draft block in one batched "
+                         "step — greedy acceptance keeps output streams "
+                         "identical while repetitive text finishes in fewer "
+                         "pooled steps")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative block width: 1 committed token + up "
+                         "to spec-k - 1 drafted tokens per verify step")
     ap.add_argument("--max-batch", type=int, default=2,
                     help="slot-pool size (concurrent sequences)")
     ap.add_argument("--s-max", type=int, default=128,
@@ -63,7 +73,8 @@ def main(argv=None) -> int:
     engine_kw = dict(max_batch=args.max_batch, s_max=args.s_max,
                      kv_mode=kv_mode, page_size=args.page_size,
                      n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
-                     cache_dtype=jnp.bfloat16)
+                     cache_dtype=jnp.bfloat16,
+                     spec_mode=args.spec_mode, spec_k=args.spec_k)
 
     if args.quant == "fp":
         engine = ServeEngine(cfg, params, **engine_kw)
@@ -109,7 +120,13 @@ def main(argv=None) -> int:
           f"(block-sparse {rep['kv_bytes_read']} vs dense "
           f"{rep['kv_bytes_read_dense']} bytes); "
           f"prefix hits {rep['prefix_hits']} "
-          f"(cow {rep['cow_copies']})")
+          f"(cow {rep['cow_copies']})"
+          + (f"; spec[{args.spec_mode}] accepted {rep['spec_accepted']}/"
+             f"{rep['spec_proposed']} drafts "
+             f"({rep['spec_acceptance']:.0%}) over "
+             f"{rep['spec_verify_steps']} verify steps, "
+             f"{rep['decode_steps_saved']} slot-steps saved"
+             if args.spec_mode != "off" else ""))
     return 0
 
 

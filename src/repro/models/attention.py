@@ -40,7 +40,8 @@ def set_kv_observer(fn) -> None:
     _KV_OBSERVER = fn
 
 
-_ROUTING_KEYS = ("pos", "page_table", "start", "write_lo", "write_hi")
+_ROUTING_KEYS = ("pos", "page_table", "start", "write_lo", "write_hi",
+                 "n_valid")
 
 
 def _write_cache(cache: dict, updates: dict) -> dict:
@@ -272,6 +273,69 @@ def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     return out, new_cache
 
 
+def attention_verify_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
+                           cache: dict, *, window_flag=False,
+                           sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, dict]:
+    """Pool-wide MULTI-token decode against a paged KV pool — the
+    speculative-decoding verify step (``repro.serve.scheduler``).
+
+    x [b, k, d]: per slot, the last committed token followed by up to
+    ``k - 1`` draft tokens (the scheduler's n-gram proposals).  ``cache``
+    is the pooled-decode routing state of :func:`attention_decode_paged`
+    plus ``n_valid`` [b] int32 — how many of the k rows are real for each
+    slot (1 committed + its draft length; 0 parks an inactive slot).
+
+    Row j of slot b sits at absolute position ``pos[b] + j``.  All k rows'
+    K/V scatter into the slot's pages FIRST (rows >= n_valid route to the
+    reserved scratch page 0), then ONE kernel call attends the whole
+    ``[slot, k]`` query block with a per-row causal mask — so row j reads
+    exactly the keys a sequential decode at position ``pos[b] + j`` would
+    see, including the rows written this step.  Rejected draft positions
+    need no undo: per-slot ``pos`` is the source of truth and their page
+    rows are simply overwritten when the slot's position reaches them
+    (the scheduler COWs shared pages before the k-token write)."""
+    sq = sq or {}
+    b, kb, d = x.shape
+    pos = cache["pos"]                                      # [b]
+    n_valid = cache["n_valid"]                              # [b]
+    page_table = cache["page_table"]                        # [b, P]
+    ps = cache["k"].shape[1]
+    qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
+              smooth=sq.get("attn_qkv@smooth"), fused=sq.get("attn_qkv@fused"))
+    if "bqkv" in p:
+        qkv = qkv + p["bqkv"].astype(x.dtype)
+    q, k, v = _split_qkv(cfg, qkv)
+    positions = pos[:, None] + jnp.arange(kb, dtype=jnp.int32)[None]  # [b, k]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    quantizer = kvq.from_cache(cache)
+    parts = quantizer.quantize(k, v)
+
+    # scatter all k rows into the slot's pages; rows past a slot's valid
+    # count (draft padding, parked slots) route to scratch page 0 — one
+    # shape-stable scatter, no per-slot control flow
+    logical = jnp.clip(positions // ps, 0, page_table.shape[1] - 1)
+    page = jnp.take_along_axis(page_table, logical, axis=1)           # [b, k]
+    valid = jnp.arange(kb, dtype=jnp.int32)[None] < n_valid[:, None]
+    page_idx = jnp.where(valid, page, 0)
+    offset = positions % ps
+    new_cache = _write_cache(cache, {
+        n: cache[n].at[page_idx, offset].set(
+            parts[n].astype(cache[n].dtype)) for n in parts})
+
+    win = jnp.where(jnp.asarray(window_flag), cfg.window_size,
+                    PA.NO_WINDOW).astype(jnp.int32)
+    o = PA.paged_attention_decode(
+        q, new_cache["k"], new_cache["v"], page_table, pos,
+        window=win, softcap=cfg.attn_softcap,
+        **quantizer.kernel_operands(new_cache))
+    o = o.reshape(b, kb, cfg.n_heads * cfg.head_dim)
+    out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
+              smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
+    return out, new_cache
+
+
 def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
                             cache: dict, *, window_flag=False,
                             sq: Optional[Dict] = None) -> Tuple[jnp.ndarray, dict]:
@@ -333,17 +397,22 @@ def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         n: cache[n].at[page_idx, offset].set(
             parts[n][0].astype(cache[n].dtype)) for n in parts})
 
-    # gather-read the slot's logical key range through the page table and
-    # attend with the start-position-offset causal mask.  The op sequence
-    # (gather -> dequantize -> sdpa with a [1, 1, sq, sk] additive bias)
-    # mirrors the full-sequence prefill exactly; extra gathered keys past a
-    # query's position are NEG_INF-masked and underflow to exactly 0.
-    gathered = {n: new_cache[n][page_table].reshape(
-        1, -1, *new_cache[n].shape[2:]) for n in parts}     # [1, P*ps, kvh, .]
-    kk, vv = quantizer.dequantize(gathered, x.dtype)
-    bias = causal_bias(C, n_pages_budget * ps, cfg.window_size, window_flag,
-                       q_offset=start)
-    o = sdpa(cfg, q, kk, vv, bias)
+    # read the whole logical key range [0, pages*ps) through the page table
+    # with the start-offset causal mask — the same [slot, sq] query-block
+    # kernel as decode/verify, with b=1, sq=C and pos=[start].  On CPU the
+    # jnp gather reference reproduces the old gather→dequantize→sdpa op
+    # sequence exactly (extra gathered keys past a query's position are
+    # NEG_INF-masked and underflow to exactly 0, so fp pages stay
+    # bit-exact); on TPU/interpret the flash-style Pallas kernel streams
+    # key pages through scalar prefetch with online softmax and in-kernel
+    # int8 / int4-nibble dequant + inverse outlier redistribution.
+    win = jnp.where(jnp.asarray(window_flag), cfg.window_size,
+                    PA.NO_WINDOW).astype(jnp.int32)
+    o = PA.paged_attention_decode(
+        q, new_cache["k"], new_cache["v"], page_table[None],
+        jnp.reshape(start, (1,)).astype(jnp.int32),
+        window=win, softcap=cfg.attn_softcap,
+        **quantizer.kernel_operands(new_cache))
     o = o.reshape(b, C, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
               smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))

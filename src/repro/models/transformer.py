@@ -601,6 +601,72 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
     return logits, new_kv
 
 
+def decode_verify_paged(cfg: ModelConfig, params, tokens, kv: dict,
+                        page_table, pos, n_valid, ctx=None, *, qparams=None
+                        ) -> Tuple[jnp.ndarray, dict]:
+    """Speculative-decoding VERIFY step: score a ``[slot, k]`` block of
+    draft tokens for the whole pool in ONE traced call
+    (``repro.serve.scheduler``'s n-gram speculation path).
+
+    tokens [b, k]: per slot, the last committed token followed by up to
+    ``k - 1`` proposed draft tokens (rows past ``n_valid[b]`` are
+    padding); ``kv`` / ``page_table`` / ``pos`` as in
+    :func:`decode_step_paged` — ``pos`` stays the FIRST row's position;
+    ``n_valid`` [b] int32 counts each slot's real rows (0 parks a slot).
+
+    Returns (logits [b, k, V], updated kv dict): ``logits[b, j]`` is the
+    model's next-token distribution after consuming ``tokens[b, :j+1]`` —
+    exactly what ``decode_step_paged`` would emit at that position, so
+    greedy acceptance of the longest agreeing draft prefix reproduces
+    sequential argmax decode bit for bit on fp pages.  Rejected rows'
+    page writes need no undo: per-slot ``pos`` is the source of truth and
+    they are overwritten when the position reaches them.  Shapes are
+    static per (k bucket, page bucket) pair — the scheduler buckets both
+    — so verify compiles once per pair, never per draft length."""
+    ctx = ctx or FpCtx()
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(f"paged verify supports dense/moe, not {cfg.family}")
+    x = params["embed"][tokens].astype(cfg.compute_dtype)
+    if cfg.scale_embed:
+        x = x * math.sqrt(cfg.d_model)
+
+    flags = _window_flags(cfg)
+    # per-layer pool arrays beyond k/v (int8/int4 scales, int4 redist rows)
+    # ride the scan xs generically and come back stacked
+    extra_tree = {n: kv[n] for n in kv if n not in ("k", "v")}
+
+    def body(x, xs):
+        lp, flag, sq, c_k, c_v, c_s = xs
+        c_i = {"k": c_k, "v": c_v, "page_table": page_table, "pos": pos,
+               "n_valid": n_valid, **c_s}
+        nctx = _Named(ctx, "")
+        h = apply_norm(cfg, lp["ln1"], x)
+        a, c_i = A.attention_verify_paged(cfg, lp["attn"], nctx, h, c_i,
+                                          window_flag=flag, sq=sq)
+        if cfg.sandwich_norm:
+            a = apply_norm(cfg, lp["ln1b"], a)
+        x = x + a
+        h = apply_norm(cfg, lp["ln2"], x)
+        if "moe" in lp:
+            m, _ = E.moe(cfg, lp["moe"], nctx, h, sq=sq)
+        else:
+            m = M.mlp(cfg, lp["mlp"], nctx, h, sq=sq)
+        if cfg.sandwich_norm:
+            m = apply_norm(cfg, lp["ln2b"], m)
+        sc_out = {n: c_i[n] for n in extra_tree}
+        return x + m, (c_i["k"], c_i["v"], sc_out)
+
+    xs = (params["layers"], flags, qparams or {}, kv["k"], kv["v"], extra_tree)
+    x, (ks, vs, scs) = jax.lax.scan(body, x, xs)
+    new_kv = {"k": ks, "v": vs, **scs}
+
+    x = apply_norm(cfg, params["ln_f"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    logits = softcap(logits, cfg.final_softcap)
+    return logits, new_kv
+
+
 def prefill_chunk_paged(cfg: ModelConfig, params, tokens, kv: dict,
                         page_table, start, write_lo, write_hi, ctx=None, *,
                         qparams=None) -> Tuple[jnp.ndarray, dict]:

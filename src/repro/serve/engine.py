@@ -95,13 +95,24 @@ class ServeEngine:
     prefill compiles once per (chunk-bucket, page-bucket) pair
     (``prefill_traces`` / ``prefill_buckets`` mirror ``decode_traces`` /
     ``decode_buckets``).
+
+    **Self-speculative decoding** (``spec_mode="ngram"``, default off):
+    the scheduler drafts up to ``spec_k - 1`` tokens per live slot by
+    prompt-lookup over the slot's own history and scores every slot's
+    draft block in ONE jit'd verify step
+    (:func:`repro.models.transformer.decode_verify_paged`); greedy
+    acceptance keeps each slot's longest agreeing prefix, so fp-page
+    output streams stay bit-exact vs plain greedy decode while repetitive
+    workloads finish in fewer pooled steps.  ``verify_traces`` /
+    ``verify_buckets`` bound compiles to one per (k, page) bucket pair.
     """
 
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  s_max: int = 512, quant=None, greedy: bool = True, *,
                  kv_mode: Optional[str] = None, page_size: int = 16,
                  n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16,
-                 prefix_sharing: bool = True, prefill_chunk: int = 32):
+                 prefix_sharing: bool = True, prefill_chunk: int = 32,
+                 spec_mode: str = "off", spec_k: int = 4):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
         if isinstance(params, QuantArtifact):
             if quant is not None:
@@ -151,11 +162,18 @@ class ServeEngine:
         self.pool = PagePool(cfg, max_batch, s_max, page_size=page_size,
                              n_pages=n_pages, mode=kv_mode, dtype=cache_dtype,
                              kv_calib=kv_calib)
+        if spec_mode not in ("off", "ngram"):
+            raise ValueError(f"unknown spec_mode {spec_mode!r} "
+                             "(expected 'off' or 'ngram')")
+        self.spec_mode = spec_mode
+        self.spec_k = int(spec_k)
         self.metrics = ServeMetrics()    # last generate() run's metrics
         self.decode_traces = 0           # pooled-step (re)trace counter
         self.decode_buckets = set()      # page-budget buckets seen (lifetime)
         self.prefill_traces = 0          # chunked-prefill (re)trace counter
         self.prefill_buckets = set()     # (chunk, page) bucket pairs (lifetime)
+        self.verify_traces = 0           # spec-verify (re)trace counter
+        self.verify_buckets = set()      # (k, page) bucket pairs (lifetime)
 
         def decode(params, tokens, kv, page_table, pos):
             self.decode_traces += 1      # python side effect: trace time only
@@ -183,6 +201,19 @@ class ServeEngine:
         # start/write_lo/write_hi ride as traced scalars, never shapes
         self._prefill_step = jax.jit(prefill, donate_argnums=(2,))
 
+        def verify(params, tokens, kv, page_table, pos, n_valid):
+            self.verify_traces += 1      # python side effect: trace time only
+            logits, new_kv = T.decode_verify_paged(
+                cfg, params, tokens, kv, page_table, pos, n_valid, self.ctx,
+                qparams=qparams)
+            nxt = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1)
+            return nxt.astype(jnp.int32), new_kv
+
+        # the speculative k-token verify: k buckets to pow2 in the
+        # scheduler and n_valid rides as a traced vector, so verify
+        # compiles once per (k-bucket, page-bucket) pair
+        self._verify_step = jax.jit(verify, donate_argnums=(2,))
+
     # -- scheduler plumbing ---------------------------------------------------
 
     def _prefill_pool(self, tokens, kv, page_table, start, write_lo, write_hi):
@@ -195,13 +226,21 @@ class ServeEngine:
         self.decode_buckets.add(int(page_table.shape[1]))
         return self._decode(self.params, tokens, kv, page_table, pos)
 
+    def _verify_pool(self, tokens, kv, page_table, pos, n_valid):
+        self.verify_buckets.add((int(tokens.shape[1]),
+                                 int(page_table.shape[1])))
+        return self._verify_step(self.params, tokens, kv, page_table, pos,
+                                 n_valid)
+
     # -- public ---------------------------------------------------------------
 
     def scheduler(self) -> Scheduler:
         """A fresh scheduler over this engine's (persistent) page pool."""
         return Scheduler(self.pool, self._prefill_pool, self._decode_pool,
+                         self._verify_pool,
                          prefix_sharing=self.prefix_sharing,
-                         prefill_chunk=self.prefill_chunk)
+                         prefill_chunk=self.prefill_chunk,
+                         spec_mode=self.spec_mode, spec_k=self.spec_k)
 
     def generate(self, requests: List[Request],
                  arrivals: Optional[Sequence[int]] = None) -> List[Request]:

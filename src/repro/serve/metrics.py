@@ -30,6 +30,11 @@ class ServeMetrics:
     prefill_chunk_tokens: int = 0  # valid prompt tokens prefilled via chunks
     interleaved_steps: int = 0   # steps running a prefill chunk AND decode
     decode_stall_steps: int = 0  # steps where live decode slots got no decode
+    # self-speculative decoding (all deterministic: argmax verify)
+    spec_verify_steps: int = 0   # pooled steps that ran the k-token verify
+    spec_proposed: int = 0       # draft tokens proposed (n-gram lookup hits)
+    spec_accepted: int = 0       # draft tokens the verify argmax reproduced
+    decode_steps_saved: int = 0  # slot-steps speculation avoided (= accepted)
     preemptions: int = 0
     submitted: int = 0
     completed: int = 0
@@ -110,6 +115,12 @@ class ServeMetrics:
                                           if self.prefills else 0.0),
             "interleaved_steps": self.interleaved_steps,
             "decode_stall_steps": self.decode_stall_steps,
+            "spec_verify_steps": self.spec_verify_steps,
+            "spec_proposed": self.spec_proposed,
+            "spec_accepted": self.spec_accepted,
+            "spec_acceptance": (self.spec_accepted / self.spec_proposed
+                                if self.spec_proposed else 0.0),
+            "decode_steps_saved": self.decode_steps_saved,
             "preemptions": self.preemptions,
             "submitted": self.submitted,
             "completed": self.completed,

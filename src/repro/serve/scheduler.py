@@ -49,6 +49,20 @@ The scheduler owns the serving control loop the engine used to inline:
     for bit; with int8 pages it is approximate (within quantization
     noise).  A slot preempted mid-prefill restarts its prefill from the
     first chunk on resume;
+  * **self-speculative decoding** (``spec_mode="ngram"``) — a host-side
+    prompt-lookup proposer drafts up to ``spec_k - 1`` tokens per live
+    slot from its own prompt+output history (:mod:`repro.serve.spec`);
+    ONE batched verify step scores every slot's ``[slot, k]`` draft block
+    (:func:`repro.models.transformer.decode_verify_paged`), greedy
+    acceptance keeps each slot's longest agreeing prefix plus the model's
+    own next token, and rejected positions roll back for free — per-slot
+    ``pos`` only advances over accepted tokens, so rejected page rows are
+    simply overwritten later (COW pages are made private before the
+    k-token write).  Because acceptance re-checks every draft token
+    against the model's own argmax, fp-page output streams are bit-exact
+    vs plain greedy decode — speculation changes step count, never
+    tokens.  k buckets to pow2 so verify compiles once per (k, page)
+    bucket pair;
   * **streaming** — each emitted token is pushed through the request's
     ``stream`` callback the step it is sampled;
   * **metrics** — tokens/s, TTFT (wall clock and step clock, also stamped
@@ -69,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import tokenizer as tok
+from repro.serve import spec
 from repro.serve.metrics import ServeMetrics
 from repro.serve.pool import PagePool, bucket_pow2
 
@@ -93,6 +108,9 @@ class _Slot:
     pre_start: int = 0          # where this slot's chunked compute began
     write_from: int = 0         # first position NOT covered by shared pages
     tokens_at_arrival: int = 0  # metrics.prefill_chunk_tokens at arrival
+    # full known token stream (prompt + generated), the n-gram proposer's
+    # lookup corpus — the last entry is the next decode input
+    hist: List[int] = dataclasses.field(default_factory=list)
 
 
 class Scheduler:
@@ -104,23 +122,40 @@ class Scheduler:
     jits per bucket pair).  ``decode_fn(tokens, kv, page_table, pos) ->
     (next_tokens, new_kv)`` is the jit'd pool-wide step; ``page_table``
     arrives sliced to the step's page budget — the kernel side reads the
-    budget off the table's shape."""
+    budget off the table's shape.  ``verify_fn(tokens [b, k], kv,
+    page_table, pos, n_valid) -> (next_tokens [b, k], new_kv)`` is the
+    jit'd speculative verify block (required when ``spec_mode != "off"``;
+    the engine jits it once per (k, page) bucket pair)."""
 
     def __init__(self, pool: PagePool,
-                 prefill_fn: Callable, decode_fn: Callable, *,
+                 prefill_fn: Callable, decode_fn: Callable,
+                 verify_fn: Optional[Callable] = None, *,
                  eos: int = tok.EOS,
                  metrics: Optional[ServeMetrics] = None,
                  prefix_sharing: bool = True,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32,
+                 spec_mode: str = "off",
+                 spec_k: int = 4):
         self.pool = pool
         self.prefill = prefill_fn
         self.decode = decode_fn
+        self.verify = verify_fn
         self.eos = eos
         self.metrics = metrics if metrics is not None else ServeMetrics()
         self.prefix_sharing = prefix_sharing
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = int(prefill_chunk)
+        if spec_mode not in spec.SPEC_MODES:
+            raise ValueError(f"unknown spec_mode {spec_mode!r} "
+                             f"(expected one of {spec.SPEC_MODES})")
+        if spec_mode != "off" and verify_fn is None:
+            raise ValueError("spec_mode needs a verify_fn (the jit'd "
+                             "multi-token verify step)")
+        if spec_mode != "off" and spec_k < 2:
+            raise ValueError(f"spec_k must be >= 2, got {spec_k}")
+        self.spec_mode = spec_mode
+        self.spec_k = int(spec_k)
         n = pool.n_slots
         self.slots: List[Optional[_Slot]] = [None] * n
         self.pos = np.zeros(n, np.int32)        # per-slot live decode length
@@ -194,11 +229,18 @@ class Scheduler:
             # the per-step prompt-token budget that keeps decode flowing
             # under a long-prompt flood
             did_prefill = self._prefill_chunk_step(step_clock)
-            # back every live decode slot's next write position (may
+            # n-gram drafts first (host-side, no pool effects), so the
+            # page-backing pass can cover each slot's whole k-token write
+            drafts = (self._propose_drafts()
+                      if self.spec_mode != "off" else {})
+            # back every live decode slot's next write position(s) (may
             # preempt on pool exhaustion)
-            self._ensure_pages(queue)
+            self._ensure_pages(
+                queue, {i: 1 + len(d) for i, d in drafts.items()})
             active = [i for i, s in enumerate(self.slots)
                       if s is not None and not s.prefilling]
+            # page-backing may have preempted (or finished) a drafted slot
+            drafts = {i: d for i, d in drafts.items() if i in set(active)}
             decode_ran = False
             if active:
                 # block-sparse read budget: the longest live decoding
@@ -221,22 +263,28 @@ class Scheduler:
                     # steady state: reuse the pool's cached device table
                     table = self.pool.table()[:, :bucket]
 
-                # ONE jit'd decode for the whole pool, per-slot positions
-                # inside
-                nxt, new_kv = self.decode(
-                    jnp.asarray(self.last_tok)[:, None], self.pool.state(),
-                    table, jnp.asarray(self.pos))
-                self.pool.adopt(new_kv)
+                if drafts:
+                    # speculative path: ONE verify call scores every
+                    # slot's draft block; accepted tokens emit in order
+                    self._verify_step(active, drafts, table, bucket,
+                                      did_prefill)
+                else:
+                    # ONE jit'd decode for the whole pool, per-slot
+                    # positions inside
+                    nxt, new_kv = self.decode(
+                        jnp.asarray(self.last_tok)[:, None],
+                        self.pool.state(), table, jnp.asarray(self.pos))
+                    self.pool.adopt(new_kv)
+                    outs = np.asarray(nxt)
+                    m.decode_steps += 1
+                    m.decode_slot_steps += len(active)
+                    m.record_read(self.pool, bucket)
+                    if did_prefill:
+                        m.interleaved_steps += 1
+                    for i in active:
+                        self.pos[i] += 1
+                        self._post_token(i, int(outs[i]))
                 decode_ran = True
-                outs = np.asarray(nxt)
-                m.decode_steps += 1
-                m.decode_slot_steps += len(active)
-                m.record_read(self.pool, bucket)
-                if did_prefill:
-                    m.interleaved_steps += 1
-                for i in active:
-                    self.pos[i] += 1
-                    self._post_token(i, int(outs[i]))
             if active and not decode_ran:
                 # falsifiable stall gate: trips if a future change makes
                 # the pooled decode conditional (e.g. prefill-exclusive
@@ -337,6 +385,12 @@ class Scheduler:
                        tokens_at_arrival=tokens_at_arrival)
             self._admit_seq += 1
             st.write_from = write_from
+            # proposer corpus: prompt + every generated token (a resumed
+            # request's last token is the next decode input — ids stop one
+            # short of it, the stream does not)
+            st.hist = [int(t) for t in ids]
+            if req.out_tokens:
+                st.hist.append(int(req.out_tokens[-1]))
             fresh = not req.out_tokens
             # shared positions skip recompute entirely — their K/V is
             # already in the mapped pages.  A fresh prompt that lies fully
@@ -436,26 +490,105 @@ class Scheduler:
                 return                  # one-token request: done at prefill
         self.last_tok[slot] = st.req.out_tokens[-1]
 
+    # -- speculative decoding -------------------------------------------------
+
+    def _propose_drafts(self) -> dict:
+        """Host-side n-gram draft proposals for every live decode slot,
+        clamped so a slot's 1 + draft tokens never outrun its cache
+        capacity or its ``max_new_tokens`` budget.  Empty when nothing
+        matches — the step then falls back to plain one-token decode."""
+        drafts = {}
+        for i, st in enumerate(self.slots):
+            if st is None or st.prefilling:
+                continue
+            room_cap = self.pool.capacity - int(self.pos[i]) - 1
+            room_out = st.req.max_new_tokens - len(st.req.out_tokens) - 1
+            max_draft = min(self.spec_k - 1, room_cap, room_out)
+            if max_draft <= 0:
+                continue
+            d = spec.propose_ngram(st.hist, max_draft)
+            if d:
+                drafts[i] = d
+        return drafts
+
+    def _verify_step(self, active, drafts, table, bucket, did_prefill) -> None:
+        """ONE batched verify over the pool: every active slot's committed
+        token + draft rides a ``[slot, k]`` block (k bucketed to pow2 like
+        page budgets, so verify compiles once per (k, page) bucket pair);
+        greedy acceptance emits each slot's longest agreeing draft prefix
+        plus the model's own next token.  Rejected positions need no
+        rollback work: per-slot ``pos`` only advances over accepted
+        tokens, and the rejected page rows are overwritten when the
+        position reaches them (``_ensure_pages`` already COW'd every page
+        the k-token write touches)."""
+        m = self.metrics
+        kb = bucket_pow2(1 + max(len(d) for d in drafts.values()),
+                         self.spec_k)
+        n = self.pool.n_slots
+        toks = np.zeros((n, kb), np.int32)
+        n_valid = np.zeros(n, np.int32)
+        for i in active:
+            d = drafts.get(i, [])
+            toks[i, 0] = self.last_tok[i]
+            if d:
+                toks[i, 1:1 + len(d)] = d
+            n_valid[i] = 1 + len(d)
+        nxt, new_kv = self.verify(
+            jnp.asarray(toks), self.pool.state(), table,
+            jnp.asarray(self.pos), jnp.asarray(n_valid))
+        self.pool.adopt(new_kv)
+        outs = np.asarray(nxt)                  # [n_slots, kb]
+        m.decode_steps += 1
+        m.decode_slot_steps += len(active)
+        m.spec_verify_steps += 1
+        m.record_read(self.pool, bucket)
+        if did_prefill:
+            m.interleaved_steps += 1
+        for i in active:
+            d = drafts.get(i, [])
+            acc = spec.accept_length(d, outs[i])
+            m.spec_proposed += len(d)
+            m.spec_accepted += acc
+            m.decode_steps_saved += acc
+            # emitted stream = accepted draft prefix + the model's own
+            # next token after it — exactly sequential greedy decode
+            for t in outs[i, :acc + 1]:
+                self.pos[i] += 1
+                self._post_token(i, int(t))
+                if self.slots[i] is None:
+                    break                       # EOS / budget mid-block
+
     # -- paging / preemption --------------------------------------------------
 
-    def _ensure_pages(self, queue) -> None:
+    def _ensure_pages(self, queue, spans: Optional[dict] = None) -> None:
         """Back every live decode slot's next write position with a PRIVATE
         page (allocating, or copy-on-write when the page is prefix-shared);
         on exhaustion, preempt the live sequence holding the longest token
-        range and retry.  Mid-prefill slots need no decode-write page —
+        range and retry.  ``spans`` widens a slot's write window to cover
+        a speculative k-token block (positions ``pos .. pos+span-1`` may
+        cross a page boundary — every touched page must be private BEFORE
+        the write, or a rejected draft row would corrupt a prefix-sharing
+        sibling's history).  Mid-prefill slots need no decode-write page —
         admission preallocated their prompt's pages."""
+        spans = spans or {}
+        ps = self.pool.page_size
         for i in range(len(self.slots)):
             if self.slots[i] is None or self.slots[i].prefilling:
                 continue
             if self.pos[i] >= self.pool.capacity:
                 self._finish(i)         # slot full: out of cache headroom
                 continue
-            page_idx = int(self.pos[i]) // self.pool.page_size
-            while self.slots[i] is not None \
-                    and not self.pool.ensure_writable(i, page_idx):
-                live = [j for j, s in enumerate(self.slots) if s is not None]
-                victim = max(live, key=self._held_tokens)
-                self._preempt(victim, queue)
+            lo = int(self.pos[i]) // ps
+            hi = (int(self.pos[i]) + spans.get(i, 1) - 1) // ps
+            for page_idx in range(lo, hi + 1):
+                while self.slots[i] is not None \
+                        and not self.pool.ensure_writable(i, page_idx):
+                    live = [j for j, s in enumerate(self.slots)
+                            if s is not None]
+                    victim = max(live, key=self._held_tokens)
+                    self._preempt(victim, queue)
+                if self.slots[i] is None:
+                    break               # preempted while backing its pages
 
     def _held_tokens(self, slot: int) -> int:
         """Preemption-victim key: the token range a slot's pages cover (a
@@ -482,8 +615,10 @@ class Scheduler:
     # -- token bookkeeping ----------------------------------------------------
 
     def _post_token(self, slot: int, token: int) -> None:
-        req = self.slots[slot].req
+        st = self.slots[slot]
+        req = st.req
         req.out_tokens.append(token)
+        st.hist.append(token)
         self.last_tok[slot] = token
         self.metrics.tokens_out += 1
         stream = getattr(req, "stream", None)

@@ -1,10 +1,10 @@
 """CLI flag plumbing for the serving launcher (`repro.launch.serve`).
 
 Previously exercised only by hand: these tests pin that `--backend`,
-`--kv-mode`, `--page-size`, `--n-pages`, `--prefill-chunk`, `--max-batch`
-and `--s-max` reach `ServeEngine` unmangled (and that `--quant`/`--backend`
-reach the quantization policy), by stubbing the engine/quantizer at the
-launcher's module seam — no model compute runs."""
+`--kv-mode`, `--page-size`, `--n-pages`, `--prefill-chunk`, `--spec-mode`,
+`--spec-k`, `--max-batch` and `--s-max` reach `ServeEngine` unmangled (and
+that `--quant`/`--backend` reach the quantization policy), by stubbing the
+engine/quantizer at the launcher's module seam — no model compute runs."""
 import jax.numpy as jnp
 import pytest
 
@@ -20,7 +20,9 @@ class _StubMetrics:
             "decode_stall_steps", "ttft_ms_mean", "pool_occupancy_mean",
             "pool_occupancy_peak", "fragmentation_mean", "cache_bytes",
             "kv_read_savings", "kv_bytes_read", "kv_bytes_read_dense",
-            "prefix_hits", "cow_copies")}
+            "prefix_hits", "cow_copies", "spec_verify_steps",
+            "spec_proposed", "spec_accepted", "spec_acceptance",
+            "decode_steps_saved")}
 
 
 class _StubPool:
@@ -105,6 +107,25 @@ def test_kv_mode_int4_fp_weights(stubbed):
     # int4 pages are opt-in and independent of the weight path
     eng = _engine_kw(["--quant", "fp", "--kv-mode", "int4"], stubbed)
     assert eng.kw["kv_mode"] == "int4"
+
+
+def test_spec_flags_default_off(stubbed):
+    eng = _engine_kw(["--quant", "fp"], stubbed)
+    assert eng.kw["spec_mode"] == "off"
+    assert eng.kw["spec_k"] == 4
+
+
+def test_spec_flags_reach_engine_unmangled(stubbed):
+    eng = _engine_kw(["--quant", "fp", "--spec-mode", "ngram",
+                      "--spec-k", "6"], stubbed)
+    assert eng.kw["spec_mode"] == "ngram"
+    assert eng.kw["spec_k"] == 6
+
+
+def test_spec_mode_rejects_unknown(stubbed):
+    with pytest.raises(SystemExit):
+        L.main(["--quant", "fp", "--spec-mode", "medusa"])
+    assert not _StubEngine.calls
 
 
 def test_quantized_path_passes_artifact_and_backend(stubbed):
