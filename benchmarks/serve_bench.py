@@ -31,6 +31,13 @@ plain decode on the same workload and gates the deterministic counters:
 output token streams bit-identical, acceptance > 0, >= 25% fewer pooled
 decode steps, and verify traces bounded by the (k bucket, page bucket)
 grid — wall clock is reported for trajectory, never gated.
+An **observability case** runs one queued workload with and without a
+``repro.obs.trace.TraceRecorder`` and gates that tracing perturbs nothing
+(identical token streams and decode-step counts), that the recorded
+request lifecycles satisfy the span-ordering invariants, and that the
+exported Chrome-trace JSON (``results/TRACE_serve.json``) is well-formed;
+the full metrics-registry snapshot rides the bench artifact so
+``tools/bench_diff.py`` can gate any of it against the committed baseline.
 
 CLI:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
@@ -47,6 +54,7 @@ import numpy as np
 
 RESULTS = Path(__file__).resolve().parent / "results"
 JSON_OUT = RESULTS / "BENCH_serve.json"
+TRACE_OUT = RESULTS / "TRACE_serve.json"
 
 BACKENDS = ("fused", "fake", "fp")
 KV_MODES = ("int8", "int4", "fp")
@@ -416,6 +424,69 @@ def run_kvq(*, seed: int = 0) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Observability: tracing parity + lifecycle invariants
+# ---------------------------------------------------------------------------
+
+def run_traced(*, seed: int = 0, trace_out: Optional[Path] = None) -> dict:
+    """The observability case: the SAME queued workload (8 requests into 3
+    slots, so the run genuinely queues) through a plain engine and one
+    carrying a :class:`repro.obs.trace.TraceRecorder`.  Gate numbers:
+
+      * ``outputs_equal`` / ``decode_steps_on == _off`` — recording is
+        host-side bookkeeping between traced steps, so turning it on must
+        not perturb scheduling by a single step or output token;
+      * ``lifecycle_errors`` — every finished request's recorded span
+        sequence is well-formed (SUBMITTED <= ADMITTED <= first CHUNK <=
+        FIRST_TOKEN <= FINISHED on the step clock, B/E pairing, STEP
+        records summing to ``decode_steps``);
+      * ``chrome_errors`` — the exported Chrome-trace JSON parses and only
+        references declared pids/tids (drop it on ui.perfetto.dev);
+      * ``phase_spans`` — at least one complete span per lifecycle phase
+        the workload exercised.
+
+    Also returns the full registry snapshot under ``"registry"`` so the
+    bench artifact carries the whole metric surface, histograms included.
+    """
+    from repro.obs.trace import TraceRecorder, chrome_errors, lifecycle_errors
+    from repro.serve.engine import ServeEngine
+
+    cfg, params = _model(True)
+    streams, steps = {}, {}
+    rec = registry = None
+    for name in ("off", "on"):
+        recorder = TraceRecorder() if name == "on" else None
+        eng = ServeEngine(cfg, params, max_batch=3, s_max=64, page_size=8,
+                          recorder=recorder)
+        reqs, arrivals = _workload(seed, 8, 0.5)
+        eng.generate(reqs, arrivals)
+        assert all(r.done for r in reqs)
+        streams[name] = [list(r.out_tokens) for r in reqs]
+        steps[name] = eng.metrics.decode_steps
+        if name == "on":
+            rec = recorder
+            registry = eng.metrics.registry.snapshot()
+    phase_spans: dict = {}
+    for spans in rec.spans().values():
+        for s in spans:
+            phase_spans[s["phase"]] = phase_spans.get(s["phase"], 0) + 1
+    path = Path(trace_out) if trace_out else TRACE_OUT
+    rec.export_chrome(path)
+    return {
+        "outputs_equal": streams["on"] == streams["off"],
+        "decode_steps_off": steps["off"],
+        "decode_steps_on": steps["on"],
+        "events": len(rec.events),
+        "dropped": rec.dropped,
+        "phase_spans": phase_spans,
+        "lifecycle_errors": lifecycle_errors(rec.events,
+                                             decode_steps=steps["on"]),
+        "chrome_errors": chrome_errors(path),
+        "trace_path": str(path),
+        "registry": registry,
+    }
+
+
 def run(emit: bool = True, smoke: bool = True, **kw):
     """benchmarks.run suite hook: (name, us_per_decoded_token, derived)."""
     from benchmarks import common
@@ -458,6 +529,9 @@ def main(argv=None) -> int:
                          "spec case (1 committed + spec-k - 1 drafted)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--json-out", default=str(JSON_OUT))
+    ap.add_argument("--trace-out", default=str(TRACE_OUT),
+                    help="where the traced case writes its Chrome-trace/"
+                         "Perfetto JSON (uploaded as a CI artifact)")
     args = ap.parse_args(argv)
 
     n_requests = args.n_requests or (8 if args.smoke else 24)
@@ -562,6 +636,31 @@ def main(argv=None) -> int:
         #    be worse than the int4 bound either — it has more bits)
         assert kvq["quality_rel_int4"] <= INT4_QUALITY_RTOL, kvq
         assert kvq["quality_rel_int8"] <= INT4_QUALITY_RTOL, kvq
+    # observability: tracing must not perturb the run, and the recorded
+    # lifecycle must satisfy the span/ordering invariants (PR 8 gates);
+    # the Chrome-trace JSON lands next to the bench artifact for CI upload
+    traced = run_traced(seed=args.seed, trace_out=args.trace_out)
+    results["obs/registry"] = traced.pop("registry")
+    results["obs/trace"] = traced
+    common.emit([("serve/traced", 0.0,
+                  f"events={traced['events']}"
+                  f"_phases={len(traced['phase_spans'])}"
+                  f"_outputs_equal={int(traced['outputs_equal'])}")])
+    if args.smoke:
+        # CI gates for the observability tentpole:
+        # 1. tracing on vs off: bit-identical token streams, identical
+        #    pooled decode step count (zero perturbation)
+        assert traced["outputs_equal"], "tracing changed output tokens"
+        assert traced["decode_steps_on"] == traced["decode_steps_off"], traced
+        # 2. recorded lifecycles are well-formed on the step clock and the
+        #    export parses as a valid Chrome trace
+        assert traced["lifecycle_errors"] == [], traced["lifecycle_errors"]
+        assert traced["chrome_errors"] == [], traced["chrome_errors"]
+        assert traced["dropped"] == 0, traced
+        # 3. every phase this queued workload exercises shows >= 1 span
+        for phase in ("QUEUED", "PREFILLING", "DECODING"):
+            assert traced["phase_spans"].get(phase, 0) > 0, \
+                traced["phase_spans"]
     for backend in args.backends:
         for kv_mode in args.kv_modes:
             rep = run_case(backend, kv_mode, smoke=args.smoke,

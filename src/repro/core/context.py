@@ -179,6 +179,21 @@ class QuantCtx:
         return cfg.replace(
             method="naive" if cfg.method == "smoothquant" else "muxq")
 
+    @staticmethod
+    def _observe(name: str, x, cfg: QuantConfig, mask) -> None:
+        """Report the to-be-quantized activation to the installed quality
+        observer (repro.obs.quality) — eager path only: traced values carry
+        no data, and the serve loop must stay observation-free inside jit."""
+        obs = dispatch.quality_observer()
+        if obs is None:
+            return
+        import jax
+        if isinstance(x, jax.core.Tracer):
+            return
+        obs.observe_activation(
+            name, np.asarray(x), qmax=2 ** (cfg.act_bits - 1) - 1,
+            mask=None if mask is None else np.asarray(mask))
+
     def _fused_buffer(self, name: str, fused):
         """The packed kernel buffer for a fused-backend site: the scanned
         ``fused=`` argument, else the eager host dict."""
@@ -214,6 +229,7 @@ class QuantCtx:
                     "repro.quantize.quantize_model)")
             # else: quantize-at-use — qmatmul derives factors from the hint
 
+        self._observe(name, x, cfg, mask)
         if backend == "fused":
             buf = self._fused_buffer(name, fused)
             return dispatch.fused_matmul(
@@ -247,6 +263,7 @@ class QuantCtx:
                     "(build the packed tree via "
                     "repro.quantize.quantize_model)")
 
+        self._observe(name, x, cfg, mask)
         if backend == "fused":
             buf = self._fused_buffer(name, fused)
             return dispatch.fused_emm(

@@ -73,6 +73,26 @@ def fused_impl() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
+# Opt-in quantization-quality observer (repro.obs.quality.QualityObserver).
+# When installed, QuantCtx reports eager (non-traced) activations at every
+# quantized site; dispatch owns the slot — mirroring _FUSED_IMPL — so the
+# core context never imports repro.obs.
+_QUALITY_OBSERVER = None
+
+
+def set_quality_observer(obs):
+    """Install (or clear, with None) the process-wide quality observer;
+    returns the previous one."""
+    global _QUALITY_OBSERVER
+    prev, _QUALITY_OBSERVER = _QUALITY_OBSERVER, obs
+    return prev
+
+
+def quality_observer():
+    """The installed quality observer, or None (the default: zero cost)."""
+    return _QUALITY_OBSERVER
+
+
 def site_backend(cfg) -> Backend:
     """Execution backend for one resolved site config.
 

@@ -1,10 +1,20 @@
 """Serving launcher: load (or train a tiny) model, quantize it into a
 MUXQ artifact (calibrate → plan → prequantize → pack), serve a batch of
 prompts through the continuous-batching engine and report serving metrics
-(tokens/s, TTFT, page-pool occupancy/fragmentation)."""
+(tokens/s, TTFT, page-pool occupancy/fragmentation).
+
+Observability (see docs/OBSERVABILITY.md): ``--trace-out PATH`` records the
+run's request/step lifecycle and writes a Chrome-trace/Perfetto JSON;
+``--obs`` turns on the quant-quality observers (per-site activation stats
+on eager quantized matmuls, KV-page saturation / outlier drift sampled
+between scheduler steps); ``--json-out PATH`` dumps the final metrics
+report plus the full registry snapshot (and the quality snapshot when
+``--obs`` is set) as machine-readable JSON."""
 from __future__ import annotations
 
 import argparse
+import json
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -13,7 +23,10 @@ from repro.configs import get_config
 from repro.core.muxq import QuantConfig
 from repro.core.policy import SitePolicy
 from repro.data.pipeline import PipelineConfig, TokenPipeline
+from repro.kernels import dispatch
 from repro.models import transformer as T
+from repro.obs.quality import QualityObserver
+from repro.obs.trace import TraceRecorder
 from repro.quantize import PACK_TARGETS, quantize_model
 from repro.serve.engine import Request, ServeEngine
 
@@ -65,16 +78,37 @@ def main(argv=None) -> int:
                     help="directory to save the QuantArtifact bundle to")
     ap.add_argument("--prompts", nargs="*",
                     default=["the model computes", "a kernel shards"])
+    ap.add_argument("--trace-out", default=None,
+                    help="record request/step lifecycle spans and write a "
+                         "Chrome-trace/Perfetto JSON here (load it in "
+                         "ui.perfetto.dev); tracing is off (zero-cost) "
+                         "when unset")
+    ap.add_argument("--obs", action="store_true",
+                    help="enable the quant-quality observers: per-site "
+                         "activation amax/clip-rate on eager quantized "
+                         "matmuls and KV-page saturation + outlier-mask "
+                         "drift sampled from the pool between steps")
+    ap.add_argument("--json-out", default=None,
+                    help="dump the final metrics report plus the registry "
+                         "snapshot (and the --obs quality snapshot) as "
+                         "JSON to this path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     kv_mode = None if args.kv_mode == "auto" else args.kv_mode
+    recorder = TraceRecorder() if args.trace_out else None
+    quality = QualityObserver() if args.obs else None
+    if quality is not None:
+        # activation seam: eager quantized matmuls report per-site stats
+        # (the jitted serve path is unaffected — the hook is Tracer-guarded)
+        dispatch.set_quality_observer(quality)
     engine_kw = dict(max_batch=args.max_batch, s_max=args.s_max,
                      kv_mode=kv_mode, page_size=args.page_size,
                      n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
                      cache_dtype=jnp.bfloat16,
-                     spec_mode=args.spec_mode, spec_k=args.spec_k)
+                     spec_mode=args.spec_mode, spec_k=args.spec_k,
+                     recorder=recorder, quality=quality)
 
     if args.quant == "fp":
         engine = ServeEngine(cfg, params, **engine_kw)
@@ -127,6 +161,28 @@ def main(argv=None) -> int:
              f"{rep['spec_verify_steps']} verify steps, "
              f"{rep['decode_steps_saved']} slot-steps saved"
              if args.spec_mode != "off" else ""))
+    if quality is not None:
+        dispatch.set_quality_observer(None)
+        q = quality.snapshot()
+        print(f"obs: {len(q['sites'])} quantized sites observed, "
+              f"{q['pool_samples']} KV-pool samples")
+        for name, s in sorted(q["sites"].items()):
+            print(f"  {name}: amax {s['amax']:.3g} "
+                  f"clip {s['clip_rate']:.2%} "
+                  f"outlier-hit {s['outlier_hit_rate']:.0%}")
+    if recorder is not None:
+        path = recorder.export_chrome(args.trace_out)
+        print(f"trace: {len(recorder.events)} events "
+              f"({recorder.dropped} dropped) -> {path}")
+    if args.json_out:
+        reg = getattr(engine.metrics, "registry", None)
+        doc = {"report": rep,
+               "registry": reg.snapshot() if reg is not None else {},
+               "quality": quality.snapshot() if quality is not None else {}}
+        out = Path(args.json_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(json.dumps(doc, indent=2, sort_keys=True))
+        print(f"json: report + registry snapshot -> {out}")
     return 0
 
 

@@ -1,0 +1,20 @@
+"""Observability: serve-stack tracing, metrics registry, quality observers.
+
+  * :mod:`repro.obs.trace`    — ring-buffered request/step flight recorder
+    with Chrome-trace/Perfetto export (zero-cost when off);
+  * :mod:`repro.obs.registry` — named counters / gauges / fixed-bucket
+    histograms with one ``snapshot()`` (``ServeMetrics`` rides one);
+  * :mod:`repro.obs.quality`  — opt-in quant-quality observers on the
+    activation (``QuantCtx``/dispatch) and KV (pool page) seams.
+"""
+from repro.obs.registry import (COUNT_BUCKETS, STEP_BUCKETS, Counter, Gauge,
+                                Histogram, MetricsRegistry)
+from repro.obs.trace import (NULL_RECORDER, NullRecorder, TraceRecorder,
+                             chrome_errors, lifecycle_errors)
+from repro.obs.quality import QualityObserver
+
+__all__ = [
+    "COUNT_BUCKETS", "STEP_BUCKETS", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "NULL_RECORDER", "NullRecorder", "TraceRecorder",
+    "chrome_errors", "lifecycle_errors", "QualityObserver",
+]

@@ -31,6 +31,7 @@ from repro.core.context import QuantCtx, as_ctx
 from repro.data import tokenizer as tok
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
+from repro.obs.trace import NULL_RECORDER
 from repro.quantize import QuantArtifact
 from repro.serve.metrics import ServeMetrics
 from repro.serve.pool import PagePool
@@ -52,6 +53,11 @@ class Request:
     ttft_s: Optional[float] = None
     ttft_steps: Optional[int] = None
     ttft_prefill_tokens: Optional[int] = None
+    # latency accounting (step clock): submit -> first admission, and
+    # submit -> finish — the tail-latency quantities the p50/p95 histograms
+    # aggregate (TTFT alone hides queue time and long decodes)
+    queue_wait_steps: Optional[int] = None
+    e2e_steps: Optional[int] = None
 
 
 class ServeEngine:
@@ -112,7 +118,8 @@ class ServeEngine:
                  kv_mode: Optional[str] = None, page_size: int = 16,
                  n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16,
                  prefix_sharing: bool = True, prefill_chunk: int = 32,
-                 spec_mode: str = "off", spec_k: int = 4):
+                 spec_mode: str = "off", spec_k: int = 4,
+                 recorder=None, quality=None):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
         if isinstance(params, QuantArtifact):
             if quant is not None:
@@ -168,6 +175,12 @@ class ServeEngine:
         self.spec_mode = spec_mode
         self.spec_k = int(spec_k)
         self.metrics = ServeMetrics()    # last generate() run's metrics
+        # observability (PR 8): a repro.obs.trace recorder (NULL_RECORDER =
+        # tracing off, every hook a no-op) and an optional
+        # repro.obs.quality.QualityObserver the scheduler samples the pool
+        # into — both host-side only, never entering traced code
+        self.recorder = recorder if recorder is not None else NULL_RECORDER
+        self.quality = quality
         self.decode_traces = 0           # pooled-step (re)trace counter
         self.decode_buckets = set()      # page-budget buckets seen (lifetime)
         self.prefill_traces = 0          # chunked-prefill (re)trace counter
@@ -217,20 +230,38 @@ class ServeEngine:
     # -- scheduler plumbing ---------------------------------------------------
 
     def _prefill_pool(self, tokens, kv, page_table, start, write_lo, write_hi):
-        self.prefill_buckets.add((int(tokens.shape[1]),
-                                  int(page_table.shape[0])))
-        return self._prefill_step(self.params, tokens, kv, page_table,
-                                  start, write_lo, write_hi)
+        bucket = (int(tokens.shape[1]), int(page_table.shape[0]))
+        self.prefill_buckets.add(bucket)
+        before = self.prefill_traces
+        out = self._prefill_step(self.params, tokens, kv, page_table,
+                                 start, write_lo, write_hi)
+        if self.prefill_traces > before and self.recorder.enabled:
+            self.recorder.compile_event("prefill", chunk_bucket=bucket[0],
+                                        page_bucket=bucket[1],
+                                        traces=self.prefill_traces)
+        return out
 
     def _decode_pool(self, tokens, kv, page_table, pos):
-        self.decode_buckets.add(int(page_table.shape[1]))
-        return self._decode(self.params, tokens, kv, page_table, pos)
+        bucket = int(page_table.shape[1])
+        self.decode_buckets.add(bucket)
+        before = self.decode_traces
+        out = self._decode(self.params, tokens, kv, page_table, pos)
+        if self.decode_traces > before and self.recorder.enabled:
+            self.recorder.compile_event("decode", page_bucket=bucket,
+                                        traces=self.decode_traces)
+        return out
 
     def _verify_pool(self, tokens, kv, page_table, pos, n_valid):
-        self.verify_buckets.add((int(tokens.shape[1]),
-                                 int(page_table.shape[1])))
-        return self._verify_step(self.params, tokens, kv, page_table, pos,
-                                 n_valid)
+        bucket = (int(tokens.shape[1]), int(page_table.shape[1]))
+        self.verify_buckets.add(bucket)
+        before = self.verify_traces
+        out = self._verify_step(self.params, tokens, kv, page_table, pos,
+                                n_valid)
+        if self.verify_traces > before and self.recorder.enabled:
+            self.recorder.compile_event("verify", k_bucket=bucket[0],
+                                        page_bucket=bucket[1],
+                                        traces=self.verify_traces)
+        return out
 
     # -- public ---------------------------------------------------------------
 
@@ -240,7 +271,8 @@ class ServeEngine:
                          self._verify_pool,
                          prefix_sharing=self.prefix_sharing,
                          prefill_chunk=self.prefill_chunk,
-                         spec_mode=self.spec_mode, spec_k=self.spec_k)
+                         spec_mode=self.spec_mode, spec_k=self.spec_k,
+                         recorder=self.recorder, quality=self.quality)
 
     def generate(self, requests: List[Request],
                  arrivals: Optional[Sequence[int]] = None) -> List[Request]:

@@ -100,6 +100,10 @@ class KVQuantizer:
     key set (possibly gathered, with extra leading dims)."""
 
     mode: str = "fp"
+    # symmetric integer ceiling of the mode's codes (None for fp pages);
+    # the quality observer (repro.obs.quality) reads this to count
+    # saturated codes when it samples live pool pages
+    qmax: Optional[int] = None
 
     def quantize(self, k: jnp.ndarray, v: jnp.ndarray) -> Dict[str, jnp.ndarray]:
         raise NotImplementedError
@@ -154,6 +158,7 @@ class Int8KVQuantizer(KVQuantizer):
     ``kvcache.quantize_kv`` math — the serve tests pin its exact scales)."""
 
     mode = "int8"
+    qmax = 127
 
     def quantize(self, k, v):
         from repro.serve.kvcache import quantize_kv
@@ -190,6 +195,7 @@ class Int4KVQuantizer(KVQuantizer):
     the int8 page's bytes."""
 
     mode = "int4"
+    qmax = INT4_MAX
     scale_dtype = jnp.bfloat16
 
     def __init__(self, k_redist, v_redist):

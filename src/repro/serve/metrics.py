@@ -7,6 +7,17 @@ them outside the traced step — and :meth:`report` folds them into the
 summary dict ``launch/serve.py`` prints and ``benchmarks/serve_bench.py``
 persists into ``BENCH_serve.json``.
 
+Since PR 8 the scalar counters live in a
+:class:`repro.obs.registry.MetricsRegistry` — ``ServeMetrics`` is a facade:
+attribute reads/writes on the counter/gauge names route to the registry
+(every ``m.decode_steps += 1`` call site is unchanged), latency
+distributions accumulate in fixed-bucket histograms (``hist/ttft_steps``,
+``hist/queue_wait_steps``, ``hist/e2e_steps``, ``hist/accepted_draft_len``,
+``hist/request_decode_steps``), and ``registry.snapshot()`` dumps the whole
+metric surface for ``--json-out`` / the bench artifacts.  :meth:`report`
+keeps every pre-existing key (the serve_bench JSON schema and CI gates are
+pinned on them); the p50/p95 keys are additive.
+
 The KV read counters price the block-sparse decode: ``kv_bytes_read`` is
 what the bucketed page-budget gather actually read; ``kv_bytes_read_dense``
 is what the old full-capacity gather (``pages_per_slot`` pages per slot
@@ -15,49 +26,102 @@ read-traffic saving the paged-attention work exists to deliver.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 from typing import Dict, List, Optional
 
+from repro.obs.registry import COUNT_BUCKETS, STEP_BUCKETS, MetricsRegistry
 
-@dataclasses.dataclass
-class ServeMetrics:
-    tokens_out: int = 0          # generated tokens (prefill-sampled + decode)
-    decode_steps: int = 0        # pooled decode step invocations
-    decode_slot_steps: int = 0   # sum of active slots over decode steps
-    prefills: int = 0            # prompts fully prefilled (chunked)
-    prefill_chunks: int = 0      # chunked-prefill step invocations
-    prefill_chunk_tokens: int = 0  # valid prompt tokens prefilled via chunks
-    interleaved_steps: int = 0   # steps running a prefill chunk AND decode
-    decode_stall_steps: int = 0  # steps where live decode slots got no decode
+# scalar int counters the facade routes to registry Counters (attribute
+# name == registry name; report() reads them back by the same names)
+_COUNTERS = (
+    "tokens_out",          # generated tokens (prefill-sampled + decode)
+    "decode_steps",        # pooled decode step invocations
+    "decode_slot_steps",   # sum of active slots over decode steps
+    "prefills",            # prompts fully prefilled (chunked)
+    "prefill_chunks",      # chunked-prefill step invocations
+    "prefill_chunk_tokens",  # valid prompt tokens prefilled via chunks
+    "interleaved_steps",   # steps running a prefill chunk AND decode
+    "decode_stall_steps",  # steps where live decode slots got no decode
     # self-speculative decoding (all deterministic: argmax verify)
-    spec_verify_steps: int = 0   # pooled steps that ran the k-token verify
-    spec_proposed: int = 0       # draft tokens proposed (n-gram lookup hits)
-    spec_accepted: int = 0       # draft tokens the verify argmax reproduced
-    decode_steps_saved: int = 0  # slot-steps speculation avoided (= accepted)
-    preemptions: int = 0
-    submitted: int = 0
-    completed: int = 0
-    ttft_s: List[float] = dataclasses.field(default_factory=list)
-    ttft_steps: List[int] = dataclasses.field(default_factory=list)
-    occupancy: List[float] = dataclasses.field(default_factory=list)
-    fragmentation: List[float] = dataclasses.field(default_factory=list)
-    cache_bytes: int = 0
-    live_slots_peak: int = 0     # most slots concurrently admitted in a step
-    kv_mode: str = ""            # pool page mode ("fp"/"int8"/"int4")
-    bytes_per_token: float = 0.0  # page bytes per token position, all layers
+    "spec_verify_steps",   # pooled steps that ran the k-token verify
+    "spec_proposed",       # draft tokens proposed (n-gram lookup hits)
+    "spec_accepted",       # draft tokens the verify argmax reproduced
+    "decode_steps_saved",  # slot-steps speculation avoided (= accepted)
+    "preemptions",
+    "submitted",
+    "completed",
+    "cache_bytes",
+    "live_slots_peak",     # most slots concurrently admitted in a step
     # block-sparse decode read accounting
-    kv_bytes_read: int = 0         # bucketed page-budget gather (actual)
-    kv_bytes_read_dense: int = 0   # full-capacity gather (counterfactual)
-    decode_buckets: Dict[int, int] = dataclasses.field(default_factory=dict)
+    "kv_bytes_read",       # bucketed page-budget gather (actual)
+    "kv_bytes_read_dense",  # full-capacity gather (counterfactual)
     # prefix sharing
-    prefix_hits: int = 0           # admissions that mapped shared pages
-    shared_pages_mapped: int = 0   # pages mapped instead of allocated
-    pages_shared_peak: int = 0     # peak pages with refcount > 1
-    cow_copies: int = 0            # copy-on-write page copies THIS run
-    cow_baseline: int = 0          # pool-lifetime cow count at run start
-    _t0: Optional[float] = None
-    _t1: Optional[float] = None
+    "prefix_hits",         # admissions that mapped shared pages
+    "shared_pages_mapped",  # pages mapped instead of allocated
+    "pages_shared_peak",   # peak pages with refcount > 1
+    "cow_copies",          # copy-on-write page copies THIS run
+    "cow_baseline",        # pool-lifetime cow count at run start
+)
+_GAUGES = (
+    "bytes_per_token",     # page bytes per token position, all layers
+)
+_ROUTED = frozenset(_COUNTERS + _GAUGES)
+
+# histogram name -> bucket edges (all step-clock / small-count quantities)
+_HISTOGRAMS = (
+    ("hist/ttft_steps", STEP_BUCKETS),
+    ("hist/queue_wait_steps", STEP_BUCKETS),
+    ("hist/e2e_steps", STEP_BUCKETS),
+    ("hist/accepted_draft_len", COUNT_BUCKETS),
+    ("hist/request_decode_steps", COUNT_BUCKETS),
+)
+
+
+class ServeMetrics:
+    """Registry-backed serving metrics facade (see module docstring)."""
+
+    def __init__(self, registry: Optional[MetricsRegistry] = None):
+        d = self.__dict__
+        d["registry"] = registry if registry is not None else MetricsRegistry()
+        for name in _COUNTERS:
+            self.registry.counter(name)
+        for name in _GAUGES:
+            self.registry.gauge(name)
+        for name, buckets in _HISTOGRAMS:
+            self.registry.histogram(name, buckets)
+        # non-scalar state stays plain attrs (lists feed means/maxes the
+        # report has always exposed; the histograms carry the percentiles)
+        d["ttft_s"] = []
+        d["ttft_steps"] = []
+        d["occupancy"] = []
+        d["fragmentation"] = []
+        d["decode_buckets"] = {}
+        d["kv_mode"] = ""            # pool page mode ("fp"/"int8"/"int4")
+        d["_t0"] = None
+        d["_t1"] = None
+
+    # -- the facade: scalar metric names route to the registry ---------------
+
+    def __getattr__(self, name):
+        # only reached when ``name`` is not an instance attribute
+        if name in _ROUTED:
+            return self.__dict__["registry"].value(name)
+        raise AttributeError(name)
+
+    def __setattr__(self, name, value) -> None:
+        if name in _ROUTED:
+            self.__dict__["registry"].set_value(name, value)
+        else:
+            self.__dict__[name] = value
+
+    def observe(self, hist: str, x) -> None:
+        """Record one observation into histogram ``hist/<hist>``."""
+        self.registry.histogram(f"hist/{hist}").observe(x)
+
+    def percentile(self, hist: str, q: float) -> float:
+        return self.registry.histogram(f"hist/{hist}").percentile(q)
+
+    # -- run clock -----------------------------------------------------------
 
     def start(self) -> float:
         self._t0 = time.perf_counter()
@@ -71,6 +135,8 @@ class ServeMetrics:
         if self._t0 is None:
             return 0.0
         return (self._t1 or time.perf_counter()) - self._t0
+
+    # -- update hooks --------------------------------------------------------
 
     def record_read(self, pool, bucket: int) -> None:
         """Account one pooled decode step's KV page reads: ``bucket`` pages
@@ -128,6 +194,13 @@ class ServeMetrics:
             "ttft_ms_max": 1e3 * max(self.ttft_s) if self.ttft_s else 0.0,
             "ttft_steps_mean": self._mean(self.ttft_steps),
             "ttft_steps_max": max(self.ttft_steps) if self.ttft_steps else 0,
+            # additive since PR 8: tail latency via the bucket histograms
+            "ttft_steps_p50": self.percentile("ttft_steps", 0.50),
+            "ttft_steps_p95": self.percentile("ttft_steps", 0.95),
+            "queue_wait_steps_p50": self.percentile("queue_wait_steps", 0.50),
+            "queue_wait_steps_p95": self.percentile("queue_wait_steps", 0.95),
+            "e2e_steps_p50": self.percentile("e2e_steps", 0.50),
+            "e2e_steps_p95": self.percentile("e2e_steps", 0.95),
             "pool_occupancy_mean": self._mean(self.occupancy),
             "pool_occupancy_peak": max(self.occupancy) if self.occupancy else 0.0,
             "fragmentation_mean": self._mean(self.fragmentation),

@@ -257,6 +257,11 @@ class PagePool:
         live-page vector the scheduler turns into a read budget."""
         return (self.page_table > 0).sum(axis=1).astype(np.int32)
 
+    def live_pages(self) -> np.ndarray:
+        """Physical page ids currently mapped by at least one slot
+        (refcount > 0) — what the quality observer samples."""
+        return np.flatnonzero(self.refcount > 0)
+
     def bucket_pages(self, n_needed: int) -> int:
         """Round a page budget up to the next power of two (clamped to
         ``pages_per_slot``) so the pooled decode compiles one executable per

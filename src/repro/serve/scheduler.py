@@ -83,6 +83,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data import tokenizer as tok
+from repro.obs.trace import NULL_RECORDER
 from repro.serve import spec
 from repro.serve.metrics import ServeMetrics
 from repro.serve.pool import PagePool, bucket_pow2
@@ -135,13 +136,23 @@ class Scheduler:
                  prefix_sharing: bool = True,
                  prefill_chunk: int = 32,
                  spec_mode: str = "off",
-                 spec_k: int = 4):
+                 spec_k: int = 4,
+                 recorder=None,
+                 quality=None):
         self.pool = pool
         self.prefill = prefill_fn
         self.decode = decode_fn
         self.verify = verify_fn
         self.eos = eos
         self.metrics = metrics if metrics is not None else ServeMetrics()
+        # flight recorder (repro.obs.trace): NULL_RECORDER = tracing off,
+        # every hook an immediate no-op.  All recording is host-side —
+        # nothing below ever runs inside a traced step.
+        self.rec = recorder if recorder is not None else NULL_RECORDER
+        self.quality = quality       # optional repro.obs.quality observer
+        self._rids: dict = {}        # id(request) -> trace rid (submit order)
+        self._step = 0               # current step clock (for hooks without
+        #                              a step argument, e.g. _finish)
         self.prefix_sharing = prefix_sharing
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
@@ -184,6 +195,10 @@ class Scheduler:
                 raise ValueError(
                     f"prompt of {need - 1} tokens exceeds slot capacity "
                     f"{self.pool.capacity - 1} (raise s_max)")
+        # trace rids in submit order (stable across preemption/requeue:
+        # keyed by request identity)
+        for req in requests:
+            self._rids.setdefault(id(req), len(self._rids))
         queue = collections.deque(
             [req, int(arr), None, 0, 0] for req, arr in
             sorted(zip(requests, arrivals), key=lambda p: p[1]))
@@ -205,8 +220,9 @@ class Scheduler:
         return list(requests)
 
     def _run_loop(self, queue, step_clock: int) -> None:
-        m = self.metrics
+        m, rec = self.metrics, self.rec
         while queue or any(self.slots):
+            self._step = step_clock
             # a request's TTFT clock starts when it ARRIVES (its arrival
             # step is reached), not when run() starts — otherwise the load
             # generator's arrival schedule would inflate the queueing delay
@@ -216,6 +232,10 @@ class Scheduler:
                     entry[2] = now = now or time.perf_counter()
                     entry[3] = step_clock
                     entry[4] = m.prefill_chunk_tokens
+                    if rec.enabled:
+                        rid = self._rids[id(entry[0])]
+                        rec.instant(rid, "QUEUED", "SUBMITTED", step_clock)
+                        rec.begin(rid, "QUEUED", step_clock)
             self._admit(queue, step_clock)
             m.live_slots_peak = max(
                 m.live_slots_peak, sum(s is not None for s in self.slots))
@@ -225,9 +245,11 @@ class Scheduler:
                     continue
                 break
 
+            cow0 = self.pool.cow_count      # step-record COW delta baseline
             # at most ONE prefilling slot advances by at most one chunk —
             # the per-step prompt-token budget that keeps decode flowing
-            # under a long-prompt flood
+            # under a long-prompt flood.  Returns the chunk's step-record
+            # info (slot + buckets) or None; truthiness = "a chunk ran".
             did_prefill = self._prefill_chunk_step(step_clock)
             # n-gram drafts first (host-side, no pool effects), so the
             # page-backing pass can cover each slot's whole k-token write
@@ -242,6 +264,8 @@ class Scheduler:
             # page-backing may have preempted (or finished) a drafted slot
             drafts = {i: d for i, d in drafts.items() if i in set(active)}
             decode_ran = False
+            verify_k = None
+            bucket = 0
             if active:
                 # block-sparse read budget: the longest live decoding
                 # sequence's backed page count, bucketed so each bucket
@@ -266,8 +290,9 @@ class Scheduler:
                 if drafts:
                     # speculative path: ONE verify call scores every
                     # slot's draft block; accepted tokens emit in order
-                    self._verify_step(active, drafts, table, bucket,
-                                      did_prefill)
+                    verify_k = self._verify_step(active, drafts, table,
+                                                 bucket, did_prefill,
+                                                 step_clock)
                 else:
                     # ONE jit'd decode for the whole pool, per-slot
                     # positions inside
@@ -291,6 +316,20 @@ class Scheduler:
                 # steps) while live decode slots wait — serve_bench --smoke
                 # asserts this stays 0
                 m.decode_stall_steps += 1
+            if rec.enabled:
+                # one scheduler record per active step: what ran and what
+                # it cost — the trace's answer to "what was step N doing"
+                pf = did_prefill or {}
+                rec.step_record(
+                    step_clock, decode_ran=decode_ran, slots=len(active),
+                    page_bucket=bucket if decode_ran else 0,
+                    verify_k=verify_k or 0,
+                    prefill_slot=pf.get("slot"),
+                    chunk_bucket=pf.get("chunk_bucket", 0),
+                    prefill_page_bucket=pf.get("page_bucket", 0),
+                    cow=self.pool.cow_count - cow0)
+            if self.quality is not None:
+                self.quality.maybe_sample_pool(self.pool, step_clock)
             step_clock += 1
             live = {i: (int(self.pos[i]) if not s.prefilling else s.pre_pos)
                     for i, s in enumerate(self.slots) if s}
@@ -364,6 +403,12 @@ class Scheduler:
                     queue.popleft()
                     req.done = True
                     self.metrics.completed += 1
+                    self._stamp_finish(req, arrive_step, step_clock)
+                    if self.rec.enabled:
+                        rid = self._rids[id(req)]
+                        self.rec.end(rid, "QUEUED", step_clock)
+                        self.rec.instant(rid, "DECODING", "FINISHED",
+                                         step_clock, truncated=True)
                     continue
                 raise ValueError(
                     f"prompt of {len(ids)} tokens exceeds slot capacity "
@@ -384,6 +429,25 @@ class Scheduler:
             st = _Slot(req, submit_t, ids, arrive_step, self._admit_seq,
                        tokens_at_arrival=tokens_at_arrival)
             self._admit_seq += 1
+            fresh0 = not req.out_tokens
+            if fresh0 and getattr(req, "queue_wait_steps", None) is None:
+                # queue wait (submit -> FIRST admission; a mid-prefill
+                # preemption replay does not re-stamp) — the latency
+                # component TTFT means hide
+                try:
+                    req.queue_wait_steps = step_clock - arrive_step
+                except AttributeError:
+                    pass
+                self.metrics.observe("queue_wait_steps",
+                                     step_clock - arrive_step)
+            if self.rec.enabled:
+                rid = self._rids[id(req)]
+                self.rec.end(rid, "QUEUED", step_clock)
+                self.rec.instant(rid, "PREFILLING", "ADMITTED", step_clock,
+                                 slot=slot, prompt_tokens=len(ids),
+                                 pages=self.pool.pages_needed(len(ids)),
+                                 shared_pages=n_share, replay=not fresh0)
+                self.rec.begin(rid, "PREFILLING", step_clock, slot=slot)
             st.write_from = write_from
             # proposer corpus: prompt + every generated token (a resumed
             # request's last token is the next decode input — ids stop one
@@ -415,15 +479,16 @@ class Scheduler:
 
     # -- chunked prefill -----------------------------------------------------
 
-    def _prefill_chunk_step(self, step_clock: int) -> bool:
+    def _prefill_chunk_step(self, step_clock: int):
         """Advance ONE prefilling slot by one bucketed chunk (the per-step
         prompt-token budget).  Shortest-remaining-first among prefilling
-        slots, admission order as the tie-break.  Returns True if a chunk
-        ran."""
+        slots, admission order as the tie-break.  Returns the chunk's
+        step-record info dict (slot + buckets) when a chunk ran, else
+        None."""
         cands = [i for i, s in enumerate(self.slots)
                  if s is not None and s.prefilling]
         if not cands:
-            return False
+            return None
         slot = min(cands, key=lambda j: (len(self.slots[j].ids)
                                          - self.slots[j].pre_pos,
                                          self.slots[j].seq))
@@ -450,9 +515,14 @@ class Scheduler:
         m.prefill_chunks += 1
         m.prefill_chunk_tokens += n
         st.pre_pos = done + n
+        if self.rec.enabled:
+            self.rec.instant(self._rids[id(st.req)], "PREFILLING", "CHUNK",
+                             step_clock, slot=slot, tokens=n,
+                             chunk_bucket=cb, page_bucket=pb,
+                             done=st.pre_pos, total=len(ids))
         if st.pre_pos >= len(ids):
             self._activate(slot, int(np.asarray(nxt)[0, n - 1]), step_clock)
-        return True
+        return {"slot": slot, "chunk_bucket": cb, "page_bucket": pb}
 
     def _activate(self, slot: int, sampled: Optional[int],
                   step_clock: int) -> None:
@@ -466,10 +536,20 @@ class Scheduler:
         m = self.metrics
         m.prefills += 1
         fresh = not st.req.out_tokens
+        if self.rec.enabled:
+            rid = self._rids[id(st.req)]
+            self.rec.end(rid, "PREFILLING", step_clock)
+            # DECODING opens BEFORE the first token posts, so a one-token
+            # request's FINISHED lands inside an open DECODING span
+            self.rec.begin(rid, "DECODING", step_clock, slot=slot)
+            if fresh:
+                self.rec.instant(rid, "DECODING", "FIRST_TOKEN", step_clock,
+                                 ttft_steps=step_clock - st.arrive_step)
         if fresh:
             ttft = time.perf_counter() - st.submit_t
             m.ttft_s.append(ttft)
             m.ttft_steps.append(step_clock - st.arrive_step)
+            m.observe("ttft_steps", step_clock - st.arrive_step)
             # other requests' prompt tokens prefilled between this
             # request's arrival and its first token — the deterministic
             # face of TTFT under prefill contention (chunking bounds it by
@@ -511,7 +591,8 @@ class Scheduler:
                 drafts[i] = d
         return drafts
 
-    def _verify_step(self, active, drafts, table, bucket, did_prefill) -> None:
+    def _verify_step(self, active, drafts, table, bucket, did_prefill,
+                     step_clock: int) -> int:
         """ONE batched verify over the pool: every active slot's committed
         token + draft rides a ``[slot, k]`` block (k bucketed to pow2 like
         page budgets, so verify compiles once per (k, page) bucket pair);
@@ -550,6 +631,13 @@ class Scheduler:
             m.spec_proposed += len(d)
             m.spec_accepted += acc
             m.decode_steps_saved += acc
+            if d:
+                m.observe("accepted_draft_len", acc)
+                if self.rec.enabled:
+                    self.rec.instant(self._rids[id(self.slots[i].req)],
+                                     "VERIFY", "VERIFY", step_clock,
+                                     slot=i, k_bucket=kb, proposed=len(d),
+                                     accepted=acc)
             # emitted stream = accepted draft prefix + the model's own
             # next token after it — exactly sequential greedy decode
             for t in outs[i, :acc + 1]:
@@ -557,6 +645,7 @@ class Scheduler:
                 self._post_token(i, int(t))
                 if self.slots[i] is None:
                     break                       # EOS / budget mid-block
+        return kb
 
     # -- paging / preemption --------------------------------------------------
 
@@ -599,6 +688,14 @@ class Scheduler:
 
     def _preempt(self, slot: int, queue) -> None:
         st = self.slots[slot]
+        if self.rec.enabled:
+            rid = self._rids[id(st.req)]
+            phase = "PREFILLING" if st.prefilling else "DECODING"
+            self.rec.end(rid, phase, self._step, preempted=True)
+            self.rec.instant(rid, phase, "PREEMPTED", self._step, slot=slot,
+                             held_tokens=self._held_tokens(slot))
+            # the request re-queues: its replay admission ends this span
+            self.rec.begin(rid, "QUEUED", self._step)
         self.pool.release(slot)
         self.slots[slot] = None
         self.pos[slot] = 0
@@ -627,8 +724,27 @@ class Scheduler:
         if token == self.eos or len(req.out_tokens) >= req.max_new_tokens:
             self._finish(slot)
 
+    def _stamp_finish(self, req, arrive_step: int, step_clock: int) -> None:
+        """End-to-end latency accounting at request completion: submit ->
+        finish on the step clock, plus the per-request decode-step count
+        (both feed the p50/p95 histograms in the report)."""
+        e2e = step_clock - arrive_step
+        try:
+            req.e2e_steps = e2e
+        except AttributeError:
+            pass
+        self.metrics.observe("e2e_steps", e2e)
+        self.metrics.observe("request_decode_steps", len(req.out_tokens))
+
     def _finish(self, slot: int) -> None:
-        self.slots[slot].req.done = True
+        st = self.slots[slot]
+        st.req.done = True
+        self._stamp_finish(st.req, st.arrive_step, self._step)
+        if self.rec.enabled:
+            rid = self._rids[id(st.req)]
+            self.rec.instant(rid, "DECODING", "FINISHED", self._step,
+                             tokens=len(st.req.out_tokens))
+            self.rec.end(rid, "DECODING", self._step)
         self.pool.release(slot)
         self.slots[slot] = None
         self.pos[slot] = 0

@@ -1,0 +1,135 @@
+"""``tools/bench_diff.py``: the bench-artifact regression gate.
+
+Pins the comparison semantics CI depends on: deterministic series gated
+with per-key tolerances in the regression direction only, wall-clock keys
+never gated, baseline keys additive-only, ``outputs_equal`` never allowed
+to flip false, flat kernel artifacts compared by name presence, and a
+bench ``_config`` mismatch refusing to compare at all.
+"""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+
+_spec = importlib.util.spec_from_file_location(
+    "bench_diff", REPO / "tools" / "bench_diff.py")
+bench_diff = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_diff)
+
+
+def _base():
+    return {
+        "_config": {"smoke": True, "seed": 0},
+        "serve/fake_int8": {
+            "decode_steps": 100, "kv_bytes_read": 1000,
+            "kv_read_savings": 0.6, "elapsed_s": 1.0,
+            "tokens_per_sec": 50.0, "ttft_ms_mean": 9.0,
+        },
+        "spec/compare": {"outputs_equal": True, "step_ratio": 0.6},
+    }
+
+
+def _diff(new):
+    return bench_diff.diff_serve(_base(), new)
+
+
+def test_identical_passes():
+    failures, checked = _diff(_base())
+    assert failures == []
+    assert checked > 0
+
+
+def test_lower_better_regression_caught():
+    new = _base()
+    new["serve/fake_int8"]["decode_steps"] = 150     # > 100 * 1.10
+    failures, _ = _diff(new)
+    assert any("decode_steps" in f for f in failures)
+
+
+def test_lower_better_within_tolerance_passes():
+    new = _base()
+    new["serve/fake_int8"]["decode_steps"] = 108     # <= 100 * 1.10
+    new["serve/fake_int8"]["kv_bytes_read"] = 1050
+    failures, _ = _diff(new)
+    assert failures == []
+
+
+def test_improvement_never_fails():
+    new = _base()
+    new["serve/fake_int8"]["decode_steps"] = 10
+    new["serve/fake_int8"]["kv_read_savings"] = 0.99
+    new["spec/compare"]["step_ratio"] = 0.1
+    failures, _ = _diff(new)
+    assert failures == []
+
+
+def test_higher_better_regression_caught():
+    new = _base()
+    new["serve/fake_int8"]["kv_read_savings"] = 0.3  # < 0.6 * 0.90
+    failures, _ = _diff(new)
+    assert any("kv_read_savings" in f for f in failures)
+
+
+def test_wallclock_never_gated():
+    new = _base()
+    new["serve/fake_int8"]["elapsed_s"] = 9e9
+    new["serve/fake_int8"]["tokens_per_sec"] = 1e-9
+    new["serve/fake_int8"]["ttft_ms_mean"] = 9e9
+    failures, _ = _diff(new)
+    assert failures == []
+
+
+def test_vanished_series_fails_new_keys_pass():
+    new = _base()
+    del new["serve/fake_int8"]["kv_bytes_read"]
+    new["serve/fake_int8"]["brand_new_metric"] = 42
+    failures, _ = _diff(new)
+    assert any("vanished" in f for f in failures)
+    assert not any("brand_new_metric" in f for f in failures)
+
+
+def test_bool_flip_fails():
+    new = _base()
+    new["spec/compare"]["outputs_equal"] = False
+    failures, _ = _diff(new)
+    assert any("outputs_equal" in f for f in failures)
+
+
+def test_config_mismatch_fails():
+    new = _base()
+    new["_config"]["seed"] = 1
+    failures, _ = _diff(new)
+    assert any("_config" in f for f in failures)
+
+
+def test_rtol_scale_loosens_gates():
+    new = _base()
+    new["serve/fake_int8"]["decode_steps"] = 115
+    assert bench_diff.diff_serve(_base(), new)[0]
+    assert bench_diff.diff_serve(_base(), new, rtol_scale=2.0)[0] == []
+
+
+def test_kernels_presence_only():
+    old = {"kernel/a": 1.0, "kernel/b": 2.0}
+    assert bench_diff.diff_kernels(old, {"kernel/a": 99.0,
+                                         "kernel/b": 0.01}) == []
+    assert bench_diff.diff_kernels(old, {"kernel/a": 1.0})
+
+
+def test_cli_exit_codes(tmp_path):
+    import subprocess
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(_base()))
+    bad = tmp_path / "bad.json"
+    worse = _base()
+    worse["serve/fake_int8"]["decode_steps"] = 500
+    bad.write_text(json.dumps(worse))
+    script = str(REPO / "tools" / "bench_diff.py")
+    assert subprocess.run([sys.executable, script, str(ok), str(ok)],
+                          capture_output=True).returncode == 0
+    proc = subprocess.run([sys.executable, script, str(ok), str(bad)],
+                          capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "REGRESSION" in proc.stdout

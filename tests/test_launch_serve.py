@@ -4,7 +4,12 @@ Previously exercised only by hand: these tests pin that `--backend`,
 `--kv-mode`, `--page-size`, `--n-pages`, `--prefill-chunk`, `--spec-mode`,
 `--spec-k`, `--max-batch` and `--s-max` reach `ServeEngine` unmangled (and
 that `--quant`/`--backend` reach the quantization policy), by stubbing the
-engine/quantizer at the launcher's module seam — no model compute runs."""
+engine/quantizer at the launcher's module seam — no model compute runs.
+The PR 8 observability flags (`--trace-out`, `--obs`, `--json-out`) are
+covered the same way: recorder/observer construction and the trace/JSON
+dumps happen in the launcher, so the stub seam exercises them fully."""
+import json
+
 import jax.numpy as jnp
 import pytest
 
@@ -165,3 +170,40 @@ def test_llm_int8_fused_rejected(stubbed):
     with pytest.raises(SystemExit, match="llm_int8"):
         L.main(["--quant", "llm_int8", "--backend", "fused"])
     assert not _StubEngine.calls
+
+
+def test_observability_defaults_off(stubbed):
+    from repro.kernels import dispatch
+    eng = _engine_kw(["--quant", "fp"], stubbed)
+    assert eng.kw["recorder"] is None       # engine falls back to the no-op
+    assert eng.kw["quality"] is None
+    assert dispatch.quality_observer() is None
+
+
+def test_trace_out_reaches_engine_and_writes_chrome_json(stubbed, tmp_path):
+    from repro.obs.trace import TraceRecorder
+    out = tmp_path / "trace.json"
+    eng = _engine_kw(["--quant", "fp", "--trace-out", str(out)], stubbed)
+    assert isinstance(eng.kw["recorder"], TraceRecorder)
+    doc = json.loads(out.read_text())
+    assert isinstance(doc["traceEvents"], list)
+    assert doc["otherData"]["dropped_events"] == 0
+
+
+def test_obs_flag_installs_then_clears_observer(stubbed):
+    from repro.kernels import dispatch
+    from repro.obs.quality import QualityObserver
+    eng = _engine_kw(["--quant", "fp", "--obs"], stubbed)
+    assert isinstance(eng.kw["quality"], QualityObserver)
+    # the launcher uninstalls the process-global hook before exiting
+    assert dispatch.quality_observer() is None
+
+
+def test_json_out_dumps_report_and_registry(stubbed, tmp_path):
+    out = tmp_path / "metrics.json"
+    _engine_kw(["--quant", "fp", "--json-out", str(out)], stubbed)
+    doc = json.loads(out.read_text())
+    assert set(doc) == {"report", "registry", "quality"}
+    assert doc["registry"] == {}    # stub metrics carry no registry
+    assert doc["quality"] == {}     # --obs not set
+    assert doc["report"]["decode_steps"] == 0.0

@@ -1,0 +1,183 @@
+"""Regression diff over benchmark JSON artifacts.
+
+Compares two ``BENCH_serve.json`` (or ``BENCH_kernels.json``) files on
+their DETERMINISTIC series and exits nonzero when the new run regresses
+past per-key tolerances — the CI gate that turns the benchmark artifacts
+from trajectory decoration into an enforced floor
+(``benchmarks/results/baseline/BENCH_serve.json`` is the committed
+baseline the workflow diffs every run against; regenerate it with
+``PYTHONPATH=src python -m benchmarks.serve_bench --smoke --json-out
+benchmarks/results/baseline/BENCH_serve.json`` when a change legitimately
+moves the numbers).
+
+What is (and isn't) gated:
+
+  * step-clock and byte counters (``decode_steps``, ``kv_bytes_read``,
+    trace/compile counts, ...): deterministic for a fixed seed + config,
+    gated with small per-key tolerances (``LOWER_BETTER``);
+  * structural ratios and win metrics (``bytes_ratio``, ``read_ratio``,
+    ``kv_read_savings``, ``spec_acceptance``, ``conc_ratio``,
+    ``quality_rel_*``): gated in whichever direction is a regression;
+  * booleans (``outputs_equal``): must never flip from true to false;
+  * wall-clock (``elapsed_s``, ``tokens_per_sec``, ``*_ms*``): NEVER
+    gated — shared CI runners make them noise; they ride the artifacts
+    for trajectory only;
+  * a series present in the baseline but missing from the new run fails
+    (schema keys are additive-only); new series are always fine;
+  * flat ``BENCH_kernels.json`` (name -> us_per_call): compared by name
+    presence only — a vanished kernel series fails, timings never do.
+
+The two runs must share the bench ``_config`` (same smoke/seed/shape) —
+tolerances on a different workload are meaningless, so a config mismatch
+fails with a regenerate-the-baseline hint.
+
+Usage:  python tools/bench_diff.py BASELINE NEW [--rtol-scale X] [--list]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+from pathlib import Path
+from typing import Dict, Iterator, List, Tuple
+
+# leaf key -> relative tolerance; fail when new > old * (1 + tol)
+LOWER_BETTER: Dict[str, float] = {
+    "decode_steps": 0.10,
+    "decode_slot_steps": 0.10,
+    "prefill_chunks": 0.10,
+    "prefill_chunk_tokens": 0.10,
+    "decode_stall_steps": 0.0,       # the chunked-prefill contract: zero
+    "preemptions": 0.25,
+    "kv_bytes_read": 0.10,
+    "decode_traces": 0.0,            # compile counts are bucket-bounded
+    "prefill_traces": 0.0,
+    "verify_traces": 0.0,
+    "ttft_short_wait_tokens": 0.10,
+    "ttft_steps_p95": 0.30,
+    "queue_wait_steps_p95": 0.30,
+    "e2e_steps_p95": 0.30,
+    "step_ratio": 0.10,              # spec: ngram/off decode steps
+    "read_ratio": 0.10,              # int4/int8 decode bytes
+    "bytes_ratio": 0.0,              # structural: exactly 0.5
+    "quality_rel_int4": 0.50,
+    "quality_rel_int8": 0.50,
+}
+# leaf key -> relative tolerance; fail when new < old * (1 - tol)
+HIGHER_BETTER: Dict[str, float] = {
+    "tokens_out": 0.0,
+    "completed": 0.0,
+    "kv_read_savings": 0.10,
+    "spec_acceptance": 0.10,
+    "conc_ratio": 0.05,
+}
+MUST_STAY_TRUE = ("outputs_equal",)
+
+# wall-clock leaf keys: never gated (see module docstring)
+_WALLCLOCK_RE = re.compile(r"(_ms|per_sec|^us_|_s$|^elapsed)")
+# subtrees whose keys are run-shape details, not series (bucket tallies
+# shift legitimately with any admission-order change inside tolerance)
+_SKIP_SUBTREES = ("decode_buckets", "buckets")
+
+
+def _walk(d: dict, path: Tuple[str, ...] = ()
+          ) -> Iterator[Tuple[Tuple[str, ...], object]]:
+    for k, v in d.items():
+        if k in _SKIP_SUBTREES:
+            continue
+        if isinstance(v, dict):
+            yield from _walk(v, path + (k,))
+        else:
+            yield path + (k,), v
+
+
+def _fmt(path: Tuple[str, ...]) -> str:
+    return "/".join(path)
+
+
+def diff_kernels(old: dict, new: dict) -> List[str]:
+    """Flat name -> number artifacts: presence-only (timings are wall
+    clock)."""
+    return [f"kernel series vanished: {name!r}"
+            for name in sorted(old) if name not in new]
+
+
+def diff_serve(old: dict, new: dict, *, rtol_scale: float = 1.0,
+               verbose: bool = False) -> Tuple[List[str], int]:
+    """(failures, n_gated_comparisons) between two nested bench dicts."""
+    failures: List[str] = []
+    if old.get("_config") != new.get("_config"):
+        failures.append(
+            f"bench _config differs (baseline {old.get('_config')} vs new "
+            f"{new.get('_config')}) — the tolerances below assume one "
+            "workload; regenerate the baseline for the new config")
+    new_leaves = dict(_walk(new))
+    checked = 0
+    for path, ov in _walk(old):
+        leaf = path[-1]
+        if path[0] == "_config" or _WALLCLOCK_RE.search(leaf):
+            continue
+        gated = (leaf in LOWER_BETTER or leaf in HIGHER_BETTER
+                 or leaf in MUST_STAY_TRUE)
+        if path not in new_leaves:
+            failures.append(f"{_fmt(path)}: series vanished "
+                            "(bench keys are additive-only)")
+            continue
+        if not gated:
+            continue
+        nv = new_leaves[path]
+        checked += 1
+        if leaf in MUST_STAY_TRUE:
+            if bool(ov) and not bool(nv):
+                failures.append(f"{_fmt(path)}: flipped true -> false")
+            continue
+        ov, nv = float(ov), float(nv)
+        if leaf in LOWER_BETTER:
+            tol = LOWER_BETTER[leaf] * rtol_scale
+            bound = ov * (1.0 + tol) if ov else tol
+            ok = nv <= bound
+            arrow = "<="
+        else:
+            tol = HIGHER_BETTER[leaf] * rtol_scale
+            bound = ov * (1.0 - tol)
+            ok = nv >= bound
+            arrow = ">="
+        if not ok:
+            failures.append(f"{_fmt(path)}: {nv:g} not {arrow} {bound:g} "
+                            f"(baseline {ov:g}, tol {tol:.0%})")
+        elif verbose:
+            print(f"ok  {_fmt(path)}: {nv:g} {arrow} {bound:g} "
+                  f"(baseline {ov:g})")
+    return failures, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("new", help="freshly produced JSON to gate")
+    ap.add_argument("--rtol-scale", type=float, default=1.0,
+                    help="multiply every per-key tolerance (e.g. 2.0 to "
+                         "loosen all gates while bisecting)")
+    ap.add_argument("--list", action="store_true",
+                    help="print every gated comparison, not just failures")
+    args = ap.parse_args(argv)
+    old = json.loads(Path(args.baseline).read_text())
+    new = json.loads(Path(args.new).read_text())
+    flat = all(not isinstance(v, dict) for v in old.values())
+    if flat:
+        failures, checked = diff_kernels(old, new), len(old)
+    else:
+        failures, checked = diff_serve(old, new,
+                                       rtol_scale=args.rtol_scale,
+                                       verbose=args.list)
+    for f in failures:
+        print(f"REGRESSION: {f}")
+    print(f"bench_diff: {checked} series gated, {len(failures)} regressions "
+          f"({args.baseline} -> {args.new})")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
