@@ -38,6 +38,10 @@ request lifecycles satisfy the span-ordering invariants, and that the
 exported Chrome-trace JSON (``results/TRACE_serve.json``) is well-formed;
 the full metrics-registry snapshot rides the bench artifact so
 ``tools/bench_diff.py`` can gate any of it against the committed baseline.
+A **tensor-parallel mesh case** (subprocess, forced host devices) serves
+the same fp-page workload at ``tp=1`` and ``tp=2`` and gates the
+deterministic counters: streams bit-identical, per-shard pool bytes
+exactly half the global bytes, compile count == bucket count.
 
 CLI:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
@@ -487,6 +491,75 @@ def run_traced(*, seed: int = 0, trace_out: Optional[Path] = None) -> dict:
     }
 
 
+# the tp subprocess: same tiny model at tp=1 and tp=N, fixed workload —
+# prints one JSON doc.  Runs OUTSIDE this process because the forced
+# host-device flag must never leak into the single-device bench runs.
+_MESH_CODE = """
+import json, time
+import jax
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve.engine import Request, ServeEngine
+
+TP = %d
+cfg = get_config("gpt2-small", reduced=True).replace(n_layers=2)
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+PROMPTS = ["the model computes", "a kernel shards", "the model computes"]
+
+def drive(tp):
+    eng = ServeEngine(cfg, params, max_batch=2, s_max=64, page_size=8,
+                      prefill_chunk=16, kv_mode="fp", tp=tp)
+    reqs = [Request(p, max_new_tokens=12) for p in PROMPTS]
+    t0 = time.perf_counter()
+    eng.generate(reqs, arrivals=[0, 0, 2])
+    dt = time.perf_counter() - t0
+    rep = eng.metrics.report()
+    return [r.out_tokens for r in reqs], eng, rep, dt
+
+base, _, _, _ = drive(1)
+toks, eng, rep, dt = drive(TP)
+doc = {
+    "streams_match": toks == base,
+    "mesh_devices": eng.metrics.registry.value("serve/mesh_devices"),
+    "kv_shards": rep["kv_shards"],
+    "cache_bytes": rep["cache_bytes"],
+    "cache_bytes_per_shard": rep["cache_bytes_per_shard"],
+    "tokens_per_sec": rep["tokens_per_sec"],
+    "decode_steps": rep["decode_steps"],
+    "decode_trace_count": eng.decode_traces,
+    "decode_bucket_count": len(eng.decode_buckets),
+    "elapsed_s": dt,
+}
+print(json.dumps(doc))
+"""
+
+
+def run_mesh(*, tp: int = 2) -> dict:
+    """Tensor-parallel smoke: fp-page workload at tp=1 vs tp=N on a forced
+    host-device CPU mesh, in a subprocess.  Gates determinism (streams
+    bit-identical), the per-shard capacity split (bytes == global/tp) and
+    the compile-count invariant; wall clock rides for trajectory only."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={tp}",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=str(Path(__file__).resolve().parents[1] / "src"))
+    out = subprocess.run([sys.executable, "-c", _MESH_CODE % tp],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rep = json.loads(out.stdout.strip().splitlines()[-1])
+    # CI gates — all deterministic counters, never wall clock
+    assert rep["streams_match"], "tp streams diverged from single-device"
+    assert rep["kv_shards"] == tp and rep["mesh_devices"] == tp, rep
+    assert rep["cache_bytes_per_shard"] * tp == rep["cache_bytes"], rep
+    assert rep["decode_trace_count"] == rep["decode_bucket_count"], rep
+    return rep
+
+
 def run(emit: bool = True, smoke: bool = True, **kw):
     """benchmarks.run suite hook: (name, us_per_decoded_token, derived)."""
     from benchmarks import common
@@ -678,6 +751,15 @@ def main(argv=None) -> int:
                 assert 0 < rep["kv_bytes_read"] < rep["kv_bytes_read_dense"], (
                     backend, kv_mode, rep["kv_bytes_read"],
                     rep["kv_bytes_read_dense"])
+    # tensor-parallel mesh smoke (subprocess: forced host devices must not
+    # leak into this process) — deterministic gates live in run_mesh
+    mesh = run_mesh(tp=2)
+    results["mesh/tp2"] = mesh
+    common.emit([("serve/mesh_tp2",
+                  1e6 / mesh["tokens_per_sec"]
+                  if mesh["tokens_per_sec"] else 0.0,
+                  f"kv_shards={mesh['kv_shards']}"
+                  f"_per_shard={mesh['cache_bytes_per_shard']}")])
     results["_config"] = {
         "smoke": args.smoke, "n_requests": n_requests, "rate": args.rate,
         "max_batch": args.max_batch, "s_max": s_max,

@@ -20,6 +20,13 @@ per-layer stack of buffers is a valid ``lax.scan`` xs pytree), and the
 fused execution entry points (:func:`fused_matmul` / :func:`fused_emm`)
 that ``repro.core.context.QuantCtx`` routes through.
 
+Under the tensor-parallel serve mesh (``parallel/serve_sharding.py``)
+nothing here changes: weights stay replicated inside the shard_map body
+(MUXQ's per-token activation quantization needs the full channel vector,
+and the packed fused buffers' channel permutation doesn't slice cleanly),
+so every backend executes the same full-width GEMM per shard — only the
+KV pages shard.
+
 Buffer layout (all arrays; statics derive from shapes — ``bk = K_pad/nb``):
 
   w_int       int8 [K_pad, N]       packed weight, outlier rows first

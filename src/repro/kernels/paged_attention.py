@@ -28,6 +28,14 @@ The page table arrives pre-sliced to the scheduler's bucketed page budget
 (``pages`` = table.shape[1]), so read traffic scales with the longest live
 sequence, not the slot capacity.
 
+**Tensor-parallel serving** (``parallel/serve_sharding.py``) needs no code
+here: both the reference and the Pallas kernel derive ``kvh`` and the GQA
+group ``g = h // kvh`` from the array shapes, so inside a ``shard_map``
+body they see the per-shard head slice (``kvh / mesh``) and the grid's
+KV-head dimension shrinks to match — same program, fewer heads per device.
+The head merge (zero-pad + psum) happens in ``models/attention.py``, after
+the kernel returns.
+
 Execution selection mirrors ``repro.kernels.dispatch``:
 
   * ``auto``      — compiled Pallas on TPU, the jnp reference on CPU;

@@ -144,6 +144,41 @@ def _lower_cell(cfg, shape, mesh, quant: str, *, fsdp: bool, seq_shard: bool,
     return lowered, tokens
 
 
+def lower_paged_cell(arch: str, tp: int, *, kv_mode: str = "int8",
+                     max_batch: int = 2, s_max: int = 128,
+                     page_size: int = 16) -> dict:
+    """Prove a production config lowers through the TENSOR-PARALLEL paged
+    serving path: build a real (small) PagePool sharded over a ``tp``-device
+    ("model",) serve mesh, lower the engine's shard_map'd pooled decode with
+    abstract bf16 params (no 110B materialization, no compile), and report
+    global vs per-shard pool bytes — the capacity-scaling figure the
+    KV-head sharding exists to deliver (per-shard ≈ global / tp when the
+    config's kvh divides).
+
+    Unlike the roofline cells above this exercises the actual serve stack
+    (``repro.serve.engine`` + pool + paged kernels), not the dense
+    ``make_serve_step`` program."""
+    from repro.serve.engine import ServeEngine
+
+    cfg = get_config(arch).replace(dtype="bfloat16")
+    abs_p = _abstract_params(cfg, jnp.bfloat16)
+    eng = ServeEngine(cfg, abs_p, max_batch=max_batch, s_max=s_max,
+                      kv_mode=kv_mode, page_size=page_size, tp=tp)
+    pool = eng.pool
+    bucket = pool.bucket_pages(pool.pages_per_slot)
+    tokens = jax.ShapeDtypeStruct((max_batch, 1), jnp.int32)
+    table = jax.ShapeDtypeStruct((max_batch, bucket), jnp.int32)
+    pos = jax.ShapeDtypeStruct((max_batch,), jnp.int32)
+    lowered = eng._decode.lower(abs_p, tokens, pool.state(), table, pos)
+    return {"arch": arch, "tp": tp, "kv_mode": kv_mode,
+            "n_kv_heads": cfg.n_kv_heads,
+            "heads_sharded": pool.heads_sharded,
+            "kv_shards": pool.kv_shards,
+            "cache_bytes": pool.cache_bytes(),
+            "cache_bytes_per_shard": pool.cache_bytes_per_shard(),
+            "lowered": lowered.as_text() is not None}
+
+
 def _compile_costs(cfg, shape, mesh, quant, *, fsdp, seq_shard, scan):
     lowered, tokens = _lower_cell(cfg, shape, mesh, quant, fsdp=fsdp,
                                   seq_shard=seq_shard, scan=scan)

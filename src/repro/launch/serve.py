@@ -66,6 +66,14 @@ def main(argv=None) -> int:
     ap.add_argument("--spec-k", type=int, default=4,
                     help="speculative block width: 1 committed token + up "
                          "to spec-k - 1 drafted tokens per verify step")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel serving mesh size: shard the KV "
+                         "pages (and int8/int4 scales + int4 redistribution "
+                         "rows) across N devices on the KV-head axis; 1 "
+                         "(default) serves single-device with no mesh.  A "
+                         "model whose kv-head count N doesn't divide falls "
+                         "back to replicated placement (no capacity win, "
+                         "same outputs)")
     ap.add_argument("--max-batch", type=int, default=2,
                     help="slot-pool size (concurrent sequences)")
     ap.add_argument("--s-max", type=int, default=128,
@@ -95,6 +103,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, reduced=True)
+    if args.tp < 1:
+        raise SystemExit(f"--tp must be >= 1, got {args.tp}")
+    if args.tp > jax.device_count():
+        raise SystemExit(
+            f"--tp {args.tp}: requested a {args.tp}-device serving mesh but "
+            f"only {jax.device_count()} device(s) are visible — lower --tp "
+            f"or expose more devices (CPU test meshes: "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.tp})")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     kv_mode = None if args.kv_mode == "auto" else args.kv_mode
     recorder = TraceRecorder() if args.trace_out else None
@@ -108,7 +124,7 @@ def main(argv=None) -> int:
                      n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
                      cache_dtype=jnp.bfloat16,
                      spec_mode=args.spec_mode, spec_k=args.spec_k,
-                     recorder=recorder, quality=quality)
+                     recorder=recorder, quality=quality, tp=args.tp)
 
     if args.quant == "fp":
         engine = ServeEngine(cfg, params, **engine_kw)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.kernels import paged_attention as PA
 from repro.models.common import ModelConfig, apply_rope, dense_init, softcap
+from repro.parallel import serve_sharding as TP
 from repro.parallel.act_sharding import cache_update_mode
 from repro.serve import kvq
 
@@ -238,6 +239,14 @@ def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     if "bqkv" in p:
         qkv = qkv + p["bqkv"].astype(x.dtype)
     q, k, v = _split_qkv(cfg, qkv)
+    # tensor-parallel serving: inside the engine's shard_map body each
+    # shard keeps only its contiguous run of kv heads (and their grouped q
+    # heads — GQA orders q as head = kvh_index * group + g, so both slices
+    # are contiguous); quantize, page writes and the kernel then run
+    # entirely shard-local, and the outputs psum back below
+    shard = TP.active()
+    if shard is not None:
+        q, k, v = (TP.slice_heads(t, shard) for t in (q, k, v))
     positions = pos[:, None].astype(jnp.int32)              # [b, 1]
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -266,7 +275,13 @@ def attention_decode_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     o = PA.paged_attention_decode(
         q[:, 0], new_cache["k"], new_cache["v"], page_table, pos,
         window=win, softcap=cfg.attn_softcap,
-        **quantizer.kernel_operands(new_cache))[:, None]
+        **quantizer.kernel_operands(new_cache))
+    if shard is not None:
+        # zero-pad psum gather back to the full head axis (bit-exact:
+        # every element = one shard's value + M-1 exact zeros), so the
+        # attn_out projection sees the full per-token channel vector the
+        # MUXQ per-token act-quant requires
+        o = TP.all_heads(o, cfg.n_heads, shard)
     o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
               smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
@@ -305,6 +320,11 @@ def attention_verify_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     if "bqkv" in p:
         qkv = qkv + p["bqkv"].astype(x.dtype)
     q, k, v = _split_qkv(cfg, qkv)
+    # per-shard head slice under tensor-parallel serving (see
+    # attention_decode_paged — same contiguous GQA cut, same psum below)
+    shard = TP.active()
+    if shard is not None:
+        q, k, v = (TP.slice_heads(t, shard) for t in (q, k, v))
     positions = pos[:, None] + jnp.arange(kb, dtype=jnp.int32)[None]  # [b, k]
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
@@ -330,6 +350,8 @@ def attention_verify_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         q, new_cache["k"], new_cache["v"], page_table, pos,
         window=win, softcap=cfg.attn_softcap,
         **quantizer.kernel_operands(new_cache))
+    if shard is not None:
+        o = TP.all_heads(o, cfg.n_heads, shard)
     o = o.reshape(b, kb, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
               smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))
@@ -376,6 +398,11 @@ def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     if "bqkv" in p:
         qkv = qkv + p["bqkv"].astype(x.dtype)
     q, k, v = _split_qkv(cfg, qkv)
+    # per-shard head slice under tensor-parallel serving (see
+    # attention_decode_paged — same contiguous GQA cut, same psum below)
+    shard = TP.active()
+    if shard is not None:
+        q, k, v = (TP.slice_heads(t, shard) for t in (q, k, v))
     p_abs = start + jnp.arange(C, dtype=jnp.int32)          # [C] absolute pos
     positions = jnp.broadcast_to(p_abs[None], (b, C))
     q = apply_rope(q, positions, cfg.rope_theta)
@@ -413,6 +440,8 @@ def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
         jnp.reshape(start, (1,)).astype(jnp.int32),
         window=win, softcap=cfg.attn_softcap,
         **quantizer.kernel_operands(new_cache))
+    if shard is not None:
+        o = TP.all_heads(o, cfg.n_heads, shard)
     o = o.reshape(b, C, cfg.n_heads * cfg.head_dim)
     out = ctx("attn_out", o, p["wo"], mask=sq.get("attn_out"),
               smooth=sq.get("attn_out@smooth"), fused=sq.get("attn_out@fused"))

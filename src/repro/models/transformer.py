@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.context import FpCtx
+from repro.parallel import serve_sharding as TP
 from repro.parallel.act_sharding import constrain
 from repro.models import attention as A
 from repro.models import mlp as M
@@ -596,7 +597,10 @@ def decode_step_paged(cfg: ModelConfig, params, tokens, kv: dict,
 
     x = apply_norm(cfg, params["ln_f"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = x @ head.astype(x.dtype)
+    # under tensor-parallel serving each shard computes its contiguous
+    # vocab-column slice and a zero-pad psum reassembles the replicated
+    # logits (bit-exact; plain full matmul when no shard context is active)
+    logits = TP.tp_logits(x, head.astype(x.dtype))
     logits = softcap(logits, cfg.final_softcap)
     return logits, new_kv
 
@@ -662,7 +666,10 @@ def decode_verify_paged(cfg: ModelConfig, params, tokens, kv: dict,
 
     x = apply_norm(cfg, params["ln_f"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = x @ head.astype(x.dtype)
+    # under tensor-parallel serving each shard computes its contiguous
+    # vocab-column slice and a zero-pad psum reassembles the replicated
+    # logits (bit-exact; plain full matmul when no shard context is active)
+    logits = TP.tp_logits(x, head.astype(x.dtype))
     logits = softcap(logits, cfg.final_softcap)
     return logits, new_kv
 
@@ -729,7 +736,10 @@ def prefill_chunk_paged(cfg: ModelConfig, params, tokens, kv: dict,
 
     x = apply_norm(cfg, params["ln_f"], x)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = x @ head.astype(x.dtype)
+    # under tensor-parallel serving each shard computes its contiguous
+    # vocab-column slice and a zero-pad psum reassembles the replicated
+    # logits (bit-exact; plain full matmul when no shard context is active)
+    logits = TP.tp_logits(x, head.astype(x.dtype))
     logits = softcap(logits, cfg.final_softcap)
     return logits, new_kv
 

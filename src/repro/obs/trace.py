@@ -74,6 +74,9 @@ class NullRecorder:
     def compile_event(self, kind, **args):
         pass
 
+    def set_metadata(self, **kw):
+        pass
+
     @property
     def events(self):
         return []
@@ -94,6 +97,7 @@ class TraceRecorder:
         self._events = collections.deque(maxlen=capacity)
         self._epoch = time.perf_counter()
         self.dropped = 0
+        self.metadata: Dict[str, object] = {}
 
     # -- recording -----------------------------------------------------------
 
@@ -130,6 +134,13 @@ class TraceRecorder:
         — 'decode' / 'prefill' / 'verify')."""
         self._push("I", SCHED_RID, "SCHED", "COMPILE", None,
                    dict(args, kind=kind))
+
+    def set_metadata(self, **kw) -> None:
+        """Run-level metadata (e.g. the serving mesh shape) stamped into
+        the exported Chrome trace: ``otherData`` keys plus a
+        ``process_labels`` badge on every process, so traces recorded at
+        different mesh sizes are distinguishable in the viewer."""
+        self.metadata.update(kw)
 
     # -- consumption ---------------------------------------------------------
 
@@ -183,8 +194,15 @@ class TraceRecorder:
         meta += [{"name": "thread_name", "ph": "M", "pid": pid, "tid": tid,
                   "args": {"name": phase}}
                  for pid, tid, phase in sorted(tids_seen)]
+        if self.metadata:
+            label = ",".join(f"{k}={v}"
+                             for k, v in sorted(self.metadata.items()))
+            meta += [{"name": "process_labels", "ph": "M", "pid": pid,
+                      "args": {"labels": label}}
+                     for pid, _rid in sorted(pids_seen)]
         doc = {"traceEvents": meta + events, "displayTimeUnit": "ms",
-               "otherData": {"dropped_events": self.dropped}}
+               "otherData": dict(self.metadata,
+                                 dropped_events=self.dropped)}
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         path.write_text(json.dumps(doc) + "\n")

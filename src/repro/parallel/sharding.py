@@ -22,13 +22,15 @@ per-arch special cases.
 from __future__ import annotations
 
 import re
-from typing import Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.models.common import ModelConfig
+if TYPE_CHECKING:       # annotation-only: a runtime import would cycle
+    # (models.transformer -> parallel.serve_sharding -> here -> models)
+    from repro.models.common import ModelConfig
 
 
 def mesh_axis_size(mesh: Mesh, axes) -> int:

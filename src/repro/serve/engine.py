@@ -26,12 +26,15 @@ from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.context import QuantCtx, as_ctx
 from repro.data import tokenizer as tok
 from repro.models import transformer as T
 from repro.models.common import ModelConfig
 from repro.obs.trace import NULL_RECORDER
+from repro.parallel import serve_sharding as SS
 from repro.quantize import QuantArtifact
 from repro.serve.metrics import ServeMetrics
 from repro.serve.pool import PagePool
@@ -119,7 +122,7 @@ class ServeEngine:
                  n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16,
                  prefix_sharing: bool = True, prefill_chunk: int = 32,
                  spec_mode: str = "off", spec_k: int = 4,
-                 recorder=None, quality=None):
+                 recorder=None, quality=None, tp: Optional[int] = None):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
         if isinstance(params, QuantArtifact):
             if quant is not None:
@@ -166,15 +169,31 @@ class ServeEngine:
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = int(prefill_chunk)
+        # tensor-parallel serving: tp > 1 builds a ("model",) mesh, the pool
+        # allocates its pages/scales/redist rows sharded on the kvh axis,
+        # and the jit'd steps below wrap in shard_map.  tp=None/1 keeps the
+        # mesh-free single-device path byte-for-byte (same closures, same
+        # jaxprs — the default path compiles to today's executables).
+        self.tp = 1 if tp is None else int(tp)
+        if self.tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        self.mesh = SS.serve_mesh(self.tp) if self.tp > 1 else None
         self.pool = PagePool(cfg, max_batch, s_max, page_size=page_size,
                              n_pages=n_pages, mode=kv_mode, dtype=cache_dtype,
-                             kv_calib=kv_calib)
+                             kv_calib=kv_calib, mesh=self.mesh)
+        # GQA fallback: a kvh the mesh doesn't divide drops the "model"
+        # axis in fit_spec — the pool is replicated across the mesh and the
+        # steps stay plain jit (no shard_map, no collectives; replicated
+        # GSPMD compute is bit-identical to single-device)
+        shard = (SS.HeadShard(SS.SERVE_AXIS, self.tp)
+                 if self.pool.heads_sharded else None)
+        self._shard = shard
         if spec_mode not in ("off", "ngram"):
             raise ValueError(f"unknown spec_mode {spec_mode!r} "
                              "(expected 'off' or 'ngram')")
         self.spec_mode = spec_mode
         self.spec_k = int(spec_k)
-        self.metrics = ServeMetrics()    # last generate() run's metrics
+        self.metrics = self._fresh_metrics()  # last generate() run's metrics
         # observability (PR 8): a repro.obs.trace recorder (NULL_RECORDER =
         # tracing off, every hook a no-op) and an optional
         # repro.obs.quality.QualityObserver the scheduler samples the pool
@@ -188,44 +207,94 @@ class ServeEngine:
         self.verify_traces = 0           # spec-verify (re)trace counter
         self.verify_buckets = set()      # (k, page) bucket pairs (lifetime)
 
-        def decode(params, tokens, kv, page_table, pos):
-            self.decode_traces += 1      # python side effect: trace time only
-            logits, new_kv = T.decode_step_paged(cfg, params, tokens, kv,
-                                                 page_table, pos, self.ctx,
-                                                 qparams=qparams)
+        def tp_wrap(body, n_rest):
+            """shard_map the step body when head-sharded, else pass through.
+
+            Signature contract: ``body(params, tokens, kv, *rest)`` with
+            the pool tree at position 2.  params/tokens/page tables/
+            positions are replicated (``P()`` pytree prefixes); the pool
+            tree carries the pool's allocation PartitionSpecs in AND out,
+            so the shard_map'd step donates and returns pages exactly as
+            sharded as it received them.  Weights stay replicated inside
+            the body: the fused-QKV column layout is [q | k | v] head
+            regions, which a contiguous "model" column shard would
+            interleave, and a contraction-split wo psum is neither
+            bit-exact nor compatible with MUXQ's per-token act-quant at
+            attn_out (it needs the full channel vector) — the capacity
+            win lives in the KV pages, which dominate serving HBM."""
+            if shard is None:
+                return body
+            kv_specs = self.pool.kv_pspecs
+            return shard_map(
+                body, mesh=self.mesh,
+                in_specs=(P(), P(), kv_specs) + (P(),) * n_rest,
+                out_specs=(P(), kv_specs), check_rep=False)
+
+        def decode_body(params, tokens, kv, page_table, pos):
+            with SS.head_sharding(shard):
+                logits, new_kv = T.decode_step_paged(cfg, params, tokens, kv,
+                                                     page_table, pos, self.ctx,
+                                                     qparams=qparams)
             nxt = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
             return nxt.astype(jnp.int32), new_kv
 
+        decode_step = tp_wrap(decode_body, 2)
+
+        def decode(params, tokens, kv, page_table, pos):
+            self.decode_traces += 1      # python side effect: trace time only
+            return decode_step(params, tokens, kv, page_table, pos)
+
         # one compiled executable per page-budget bucket (the table's width):
         # the scheduler buckets ceil(pos/ps) to powers of two, so the step
-        # retraces once per bucket, never per sequence length
+        # retraces once per bucket, never per sequence length — the trace
+        # counter increments in the OUTER jit'd fn, so the compile-count
+        # invariant (traces == buckets seen) holds at every mesh size
         self._decode = jax.jit(decode, donate_argnums=(2,))
+
+        def prefill_body(params, tokens, kv, page_table, start, write_lo,
+                         write_hi):
+            with SS.head_sharding(shard):
+                logits, new_kv = T.prefill_chunk_paged(
+                    cfg, params, tokens, kv, page_table, start, write_lo,
+                    write_hi, self.ctx, qparams=qparams)
+            nxt = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1)
+            return nxt.astype(jnp.int32), new_kv
+
+        prefill_step = tp_wrap(prefill_body, 4)
 
         def prefill(params, tokens, kv, page_table, start, write_lo, write_hi):
             self.prefill_traces += 1     # python side effect: trace time only
-            logits, new_kv = T.prefill_chunk_paged(
-                cfg, params, tokens, kv, page_table, start, write_lo,
-                write_hi, self.ctx, qparams=qparams)
-            nxt = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1)
-            return nxt.astype(jnp.int32), new_kv
+            return prefill_step(params, tokens, kv, page_table, start,
+                                write_lo, write_hi)
 
         # chunk shapes are bucketed like decode page budgets: the chunked
         # prefill compiles once per (chunk-bucket, page-bucket) pair —
         # start/write_lo/write_hi ride as traced scalars, never shapes
         self._prefill_step = jax.jit(prefill, donate_argnums=(2,))
 
-        def verify(params, tokens, kv, page_table, pos, n_valid):
-            self.verify_traces += 1      # python side effect: trace time only
-            logits, new_kv = T.decode_verify_paged(
-                cfg, params, tokens, kv, page_table, pos, n_valid, self.ctx,
-                qparams=qparams)
+        def verify_body(params, tokens, kv, page_table, pos, n_valid):
+            with SS.head_sharding(shard):
+                logits, new_kv = T.decode_verify_paged(
+                    cfg, params, tokens, kv, page_table, pos, n_valid,
+                    self.ctx, qparams=qparams)
             nxt = jnp.argmax(logits[:, :, : cfg.vocab_size], axis=-1)
             return nxt.astype(jnp.int32), new_kv
+
+        verify_step = tp_wrap(verify_body, 3)
+
+        def verify(params, tokens, kv, page_table, pos, n_valid):
+            self.verify_traces += 1      # python side effect: trace time only
+            return verify_step(params, tokens, kv, page_table, pos, n_valid)
 
         # the speculative k-token verify: k buckets to pow2 in the
         # scheduler and n_valid rides as a traced vector, so verify
         # compiles once per (k-bucket, page-bucket) pair
         self._verify_step = jax.jit(verify, donate_argnums=(2,))
+        # mesh shape into the trace metadata (Chrome-trace process labels +
+        # otherData) so traces from different mesh sizes are distinguishable
+        if self.recorder.enabled:
+            self.recorder.set_metadata(mesh_devices=self.tp,
+                                       kv_shards=self.pool.kv_shards)
 
     # -- scheduler plumbing ---------------------------------------------------
 
@@ -265,10 +334,19 @@ class ServeEngine:
 
     # -- public ---------------------------------------------------------------
 
+    def _fresh_metrics(self) -> ServeMetrics:
+        """A per-run ServeMetrics with the mesh shape stamped into registry
+        gauges (rides ``registry.snapshot()`` into --json-out and the bench
+        artifacts; the Scheduler itself stays mesh-oblivious)."""
+        m = ServeMetrics()
+        m.registry.gauge("serve/mesh_devices").set(float(self.tp))
+        m.registry.gauge("serve/kv_shards").set(float(self.pool.kv_shards))
+        return m
+
     def scheduler(self) -> Scheduler:
         """A fresh scheduler over this engine's (persistent) page pool."""
         return Scheduler(self.pool, self._prefill_pool, self._decode_pool,
-                         self._verify_pool,
+                         self._verify_pool, metrics=self._fresh_metrics(),
                          prefix_sharing=self.prefix_sharing,
                          prefill_chunk=self.prefill_chunk,
                          spec_mode=self.spec_mode, spec_k=self.spec_k,

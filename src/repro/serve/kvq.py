@@ -38,6 +38,14 @@ set (:func:`from_cache`): int4 pages carry per-layer ``k_redist``/
 carry neither — the same sentinel convention the scan bodies in
 ``models/transformer.py`` thread through ``lax.scan``.
 
+**Head-locality.**  Every quantity here is local to one (position, head)
+cell (int8 scales) or one head row (int4 redist rows + masks) — nothing
+reduces across heads.  Tensor-parallel serving leans on that invariance:
+sharding pages, scales and redist rows on the KV-head axis
+(``parallel/serve_sharding.py``) commutes with quantize/dequantize, so
+int8/int4 streams under a mesh are exactly the single-device streams (the
+parity tests in ``tests/test_serve_tp.py`` pin this).
+
 This module deliberately imports nothing from ``repro.models`` or
 ``repro.kernels`` so the Pallas kernel can share :func:`unpack_int4`
 without an import cycle.

@@ -51,6 +51,10 @@ _COUNTERS = (
     "submitted",
     "completed",
     "cache_bytes",
+    "cache_bytes_per_shard",  # ONE mesh shard's pool bytes (== cache_bytes
+                              # single-device); cache_bytes stays GLOBAL
+                              # under a mesh so the CI-gated byte series
+                              # never silently become per-shard
     "live_slots_peak",     # most slots concurrently admitted in a step
     # block-sparse decode read accounting
     "kv_bytes_read",       # bucketed page-budget gather (actual)
@@ -64,6 +68,8 @@ _COUNTERS = (
 )
 _GAUGES = (
     "bytes_per_token",     # page bytes per token position, all layers
+    "kv_shards",           # mesh shards the KV pages split over (1 = no
+                           # mesh / replicated GQA fallback)
 )
 _ROUTED = frozenset(_COUNTERS + _GAUGES)
 
@@ -152,6 +158,9 @@ class ServeMetrics:
         if frag is not None:
             self.fragmentation.append(float(frag))
         self.cache_bytes = int(pool_stats.get("cache_bytes", self.cache_bytes))
+        self.cache_bytes_per_shard = int(pool_stats.get(
+            "cache_bytes_per_shard", self.cache_bytes_per_shard))
+        self.kv_shards = float(pool_stats.get("kv_shards", self.kv_shards))
         self.kv_mode = str(pool_stats.get("kv_mode", self.kv_mode))
         self.bytes_per_token = float(
             pool_stats.get("bytes_per_token", self.bytes_per_token))
@@ -205,6 +214,10 @@ class ServeMetrics:
             "pool_occupancy_peak": max(self.occupancy) if self.occupancy else 0.0,
             "fragmentation_mean": self._mean(self.fragmentation),
             "cache_bytes": self.cache_bytes,
+            # additive since PR 9 (tensor-parallel serving): global vs
+            # ONE-shard pool bytes + the shard count itself
+            "cache_bytes_per_shard": self.cache_bytes_per_shard,
+            "kv_shards": self.kv_shards,
             "live_slots_peak": self.live_slots_peak,
             "kv_mode": self.kv_mode,
             "bytes_per_token": self.bytes_per_token,

@@ -35,6 +35,15 @@ Page 0 is a reserved scratch page: inactive slots' decode writes land
 there and are never read back, which keeps the pooled step shape-stable
 with no per-slot control flow.
 
+**Tensor-parallel placement.**  With ``mesh=`` (a ``("model",)`` serving
+mesh from :func:`repro.parallel.serve_sharding.serve_mesh`) the pages,
+scales and int4 redistribution rows allocate with ``NamedSharding`` split
+on the kvh axis — per-shard HBM is ~``1/mesh_size`` of the global figure
+(:meth:`cache_bytes_per_shard` vs :meth:`cache_bytes`).  Everything
+host-side (page tables, refcounts, free list) is mesh-oblivious numpy; a
+GQA config the mesh doesn't divide falls back to replicated placement
+(``heads_sharded`` False) and the engine serves without collectives.
+
 **Prefix sharing / copy-on-write.**  Pages are refcounted so two slots
 whose prompts share a prefix can map the *same* physical pages for the
 shared positions (:meth:`admit` with ``share_from``/``shared_pages``).
@@ -57,11 +66,13 @@ from __future__ import annotations
 import math
 from typing import Dict, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models.common import ModelConfig
 from repro.models.attention import n_attn_layers
+from repro.parallel import serve_sharding as SS
 from repro.serve import kvq
 from repro.serve.kvcache import cache_bytes
 
@@ -83,7 +94,7 @@ class PagePool:
     def __init__(self, cfg: ModelConfig, n_slots: int, s_max: int, *,
                  page_size: int = 16, n_pages: Optional[int] = None,
                  mode: str = "int8", dtype=jnp.bfloat16,
-                 kv_calib: Optional[dict] = None):
+                 kv_calib: Optional[dict] = None, mesh=None):
         if mode not in kvq.KV_MODES:
             raise ValueError(f"unknown page mode {mode!r}")
         self.cfg, self.mode, self.dtype = cfg, mode, dtype
@@ -107,6 +118,25 @@ class PagePool:
         # stacked [L, ...] so it rides the same scan xs as the pages
         self._page_keys = tuple(self.kv)
         self.kv.update(self.quantizer.pool_state(L, kvh, dh))
+        # tensor-parallel placement: on a ("model",) mesh the pages, scales
+        # and int4 redistribution rows shard on the kvh axis via the
+        # parallel/serve_sharding spec builder (kvh % mesh -> replicated
+        # fallback, fit_spec drops the axis); host-side free-list / admit /
+        # COW / release logic below is numpy and never sees the mesh
+        self.mesh = mesh
+        if mesh is not None:
+            self.kv_pspecs = SS.pool_specs(mesh, self.kv)
+            self._shardings = {n: jax.sharding.NamedSharding(
+                mesh, self.kv_pspecs[n]) for n in self.kv}
+            self.kv = {n: jax.device_put(a, self._shardings[n])
+                       for n, a in self.kv.items()}
+            self.heads_sharded = SS.heads_sharded(self.kv_pspecs)
+            self.kv_shards = (SS.mesh_size(mesh) if self.heads_sharded else 1)
+        else:
+            self.kv_pspecs = None
+            self._shardings = None
+            self.heads_sharded = False
+            self.kv_shards = 1
         self.page_table = np.zeros((n_slots, self.pages_per_slot), np.int32)
         self.refcount = np.zeros(self.n_pages, np.int32)
         self._free = list(range(self.n_pages - 1, 0, -1))  # pop() -> page 1 first
@@ -206,7 +236,8 @@ class PagePool:
         # device-side page copy across every page-indexed array (all layers
         # at once; pool state like the int4 redist rows has no page axis)
         for name in self._page_keys:
-            self.kv[name] = self.kv[name].at[:, new].set(self.kv[name][:, old])
+            upd = self.kv[name].at[:, new].set(self.kv[name][:, old])
+            self.kv[name] = self._constrain(name, upd)
         self.refcount[old] -= 1
         self.refcount[new] = 1
         self.page_table[slot, page_idx] = new
@@ -233,6 +264,15 @@ class PagePool:
         return len(freed)
 
     # -- device state --------------------------------------------------------
+
+    def _constrain(self, name: str, arr: jnp.ndarray) -> jnp.ndarray:
+        """Re-commit a pool array updated by an EAGER op (COW copy, prefill
+        scatter) to its mesh sharding — eager GSPMD output placement is not
+        guaranteed to match the allocation spec, and the jit'd steps key
+        their executables on input shardings."""
+        if self._shardings is None:
+            return arr
+        return jax.device_put(arr, self._shardings[name])
 
     def table(self) -> jnp.ndarray:
         """The page table as a device array (cached until it changes)."""
@@ -313,13 +353,25 @@ class PagePool:
             if pad:
                 a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
             a = a.reshape(a.shape[0], n, self.page_size, *a.shape[2:])
-            self.kv[name] = self.kv[name].at[:, jnp.asarray(pids)].set(a)
+            self.kv[name] = self._constrain(
+                name, self.kv[name].at[:, jnp.asarray(pids)].set(a))
 
     # -- accounting ----------------------------------------------------------
 
     def cache_bytes(self) -> int:
-        """Bytes held by the page pool (all pages, live or free)."""
+        """GLOBAL bytes held by the page pool (all pages, live or free,
+        summed across every shard — ``jax`` keeps array sizes global under
+        a mesh, so this number is mesh-invariant by construction and the
+        CI-gated ``kv_bytes_read`` / ``bytes_per_token`` comparisons stay
+        comparable across mesh sizes)."""
         return cache_bytes(self.kv)
+
+    def cache_bytes_per_shard(self) -> int:
+        """Bytes ONE mesh shard holds (== :meth:`cache_bytes` unsharded):
+        the per-device HBM footprint — the number that actually has to fit,
+        and the capacity-scaling win the KV-head sharding exists to
+        deliver (~ global / mesh_size when kvh divides)."""
+        return sum(SS.local_bytes(a) for a in self.kv.values())
 
     def stats(self, slot_lens: Optional[Dict[int, int]] = None) -> Dict[str, float]:
         """Occupancy + fragmentation + sharing counters.  ``slot_lens``
@@ -334,6 +386,8 @@ class PagePool:
             "free_count": self.free_count,
             "alloc_failures": self.alloc_failures,
             "cache_bytes": self.cache_bytes(),
+            "cache_bytes_per_shard": self.cache_bytes_per_shard(),
+            "kv_shards": self.kv_shards,
             "kv_mode": self.mode,
             # page bytes one token position costs across all layers (K + V
             # + scales) — fp > int8 > int4 at a fixed model shape

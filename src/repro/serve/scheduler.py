@@ -70,6 +70,14 @@ The scheduler owns the serving control loop the engine used to inline:
     and decode-stall counters, pool occupancy, fragmentation, decode KV
     bytes read (block-sparse vs the dense capacity gather) and sharing
     stats via :class:`repro.serve.metrics.ServeMetrics`.
+
+The scheduler is **mesh-oblivious**: its state (slots, positions, page
+tables, the FIFO queue) is host-side numpy, and the jit'd step callables
+it drives are closed over any device mesh by the engine
+(``ServeEngine`` + ``parallel/serve_sharding.py``).  Sharded pool arrays
+flow through ``self.pool.kv`` as opaque values — nothing here branches on
+``tp``, which is exactly why tensor-parallel streams can be bit-identical
+to single-device ones.
 """
 from __future__ import annotations
 

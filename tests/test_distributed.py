@@ -258,3 +258,74 @@ def test_pipeline_bubble_schedule_shapes():
     ws = {"w": jnp.zeros((8, 5))}
     st = split_stages(ws, 2)
     assert st["w"].shape == (2, 4, 5)
+
+
+# -- fit_spec / cache_specs edge cases (PR 9) --------------------------------
+
+
+def test_fit_spec_single_device_degeneracy():
+    """A 1x1 mesh divides everything: axis names survive in the spec but
+    every shard is the full array (replicated in effect)."""
+    code = """
+    import jax, numpy as np
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import fit_spec
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = fit_spec(mesh, (3, 7), ("data", "model"))     # odd dims still fit
+    print(spec)
+    sh = NamedSharding(mesh, spec)
+    print(sh.shard_shape((3, 7)))
+    """
+    out = run_with_devices(code, n=1).strip().splitlines()
+    assert out[0] == "PartitionSpec('data', 'model')"
+    assert out[1] == "(3, 7)"
+
+
+def test_fit_spec_multipod_partial_divide():
+    """("pod","data","model") mesh: a compound dp request keeps the greedy
+    prefix of axes that divide and drops the rest — and an axis consumed by
+    one dim is not reused by a later dim."""
+    code = """
+    import jax
+    from repro.parallel.sharding import fit_spec
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    # full divide: batch over (pod, data), heads over model
+    print(fit_spec(mesh, (8, 4, 64), (("pod", "data"), None, "model")))
+    # 6 % (pod*data)=4 fails after pod: keep the dividing prefix only
+    print(fit_spec(mesh, (6, 64), (("pod", "data"), "model")))
+    # axis reuse: "model" consumed by dim 0 is unavailable to dim 1
+    print(fit_spec(mesh, (8, 8), ("model", "model")))
+    """
+    out = run_with_devices(code, n=8).strip().splitlines()
+    assert out[0] == "PartitionSpec(('pod', 'data'), None, 'model')"
+    assert out[1] == "PartitionSpec('pod', 'model')"
+    assert out[2] == "PartitionSpec('model', None)"
+
+
+def test_cache_specs_nondividing_heads_fall_back_to_seq():
+    """kv-head counts that don't divide the model axis shard the cache on
+    the SEQUENCE dim instead (flash-decoding style), never silently
+    replicate; dividing counts shard the head dim."""
+    code = """
+    import jax, json
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.parallel.sharding import cache_specs
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    base = get_config("gpt2-small", reduced=True)
+    L, b, s, dh = base.n_layers, 2, 8, base.d_model // base.n_heads
+    for kvh in (4, 3):
+        cfg = base.replace(n_kv_heads=kvh)
+        tree = {"k": jax.ShapeDtypeStruct((L, b, s, kvh, dh), jnp.bfloat16),
+                "v": jax.ShapeDtypeStruct((L, b, s, kvh, dh), jnp.bfloat16),
+                "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        specs = cache_specs(cfg, mesh, tree)
+        print(kvh, specs["k"].spec, specs["pos"].spec)
+    """
+    out = run_with_devices(code, n=4).strip().splitlines()
+    # kvh=4 divides model=2: head-sharded
+    assert out[0] == "4 PartitionSpec(None, 'data', None, 'model', None) " \
+                     "PartitionSpec(None,)"
+    # kvh=3 doesn't: sequence-sharded fallback
+    assert out[1] == "3 PartitionSpec(None, 'data', 'model', None, None) " \
+                     "PartitionSpec(None,)"

@@ -207,3 +207,28 @@ def test_json_out_dumps_report_and_registry(stubbed, tmp_path):
     assert doc["registry"] == {}    # stub metrics carry no registry
     assert doc["quality"] == {}     # --obs not set
     assert doc["report"]["decode_steps"] == 0.0
+
+
+def test_tp_default_single_device(stubbed):
+    eng = _engine_kw(["--quant", "fp"], stubbed)
+    assert eng.kw["tp"] == 1
+
+
+def test_tp_flag_reaches_engine(stubbed):
+    # tp=1 is the only size the single-device test process can validate at
+    # the argparse seam; mesh construction itself is covered by
+    # tests/test_serve_tp.py under forced host devices
+    eng = _engine_kw(["--quant", "fp", "--tp", "1"], stubbed)
+    assert eng.kw["tp"] == 1
+
+
+def test_tp_exceeding_devices_rejected_before_engine(stubbed):
+    with pytest.raises(SystemExit, match="device"):
+        L.main(["--quant", "fp", "--tp", "64"])
+    assert not _StubEngine.calls            # rejected at the flag seam
+
+
+def test_tp_zero_rejected(stubbed):
+    with pytest.raises(SystemExit, match="--tp"):
+        L.main(["--quant", "fp", "--tp", "0"])
+    assert not _StubEngine.calls
