@@ -17,10 +17,15 @@ the block-sparse page-budget gather read strictly fewer KV bytes than the
 old full-capacity gather would have, that no live decode slot stalled
 while the flood prefilled (and that chunks really interleaved with
 decode), that the short request queued behind the long prompt waited out
-at most one chunk of foreign prefill per step — strictly less than the
-baseline's whole-prompt wait — and that chunked prefill compiled at most
-once per (chunk, page) bucket pair (the CI regression gates for the
-paged decode + chunked prefill paths).  The int4 page-mode gates assert
+at most one chunk per prefill slot of foreign prefill per step — strictly
+less than the baseline's whole-prompt wait — that chunked prefill
+compiled at most once per (chunk, page) bucket pair (the CI regression
+gates for the paged decode + chunked prefill paths), that multi-slot
+batching engaged (>= one STEP record shows >= 2 slots' chunks advancing
+in ONE traced call), and that the aging picker bounded every prefilling
+request's queue age.  A **resume case** preempts a mid-prefill slot
+under pool pressure and gates that the replay re-ran ZERO written
+chunks (``rerun_chunk_tokens == 0``) with bit-identical fp streams.  The int4 page-mode gates assert
 that nibble-packed pages halve both the bytes-per-token and the decode KV
 read traffic vs int8 pages (``read_ratio <= 0.55`` over identical decode
 trajectories), that a fixed pool byte budget holds ~2x the concurrent
@@ -41,7 +46,9 @@ the full metrics-registry snapshot rides the bench artifact so
 A **tensor-parallel mesh case** (subprocess, forced host devices) serves
 the same fp-page workload at ``tp=1`` and ``tp=2`` and gates the
 deterministic counters: streams bit-identical, per-shard pool bytes
-exactly half the global bytes, compile count == bucket count.
+exactly half the global bytes, compile counts within the bucket bounds
+(decode == page buckets; prefill <= chunk x page bucket grid) at every
+mesh size.
 
 CLI:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke]
 """
@@ -192,26 +199,34 @@ def _flood_workload(s_max: int, gaps: Optional[list] = None):
 
 def run_flood(*, smoke: bool = True, prefill_chunk: int = 16,
               max_batch: int = 3, s_max: int = 256,
-              page_size: int = 8, repeats: int = 1) -> dict:
+              page_size: int = 8, prefill_slots: int = 2,
+              repeats: int = 1) -> dict:
     """Flood runs at a given chunk size; returns the best-of-``repeats``
     metrics report (same warm engine, compiles amortized; best-of damps CI
     scheduling noise) plus per-class TTFT splits — the chunked-vs-unchunked
     comparison the CI smoke asserts on.  Always uses the full-size bench
     model: on the tiny smoke model a whole-prompt prefill is
     call-overhead-dominated and costs about the same as one chunk, which
-    would invert the comparison the gate exists to protect."""
+    would invert the comparison the gate exists to protect.
+
+    The run is traced so the multi-slot gate can read the STEP records
+    directly: ``multi_prefill_step_records`` counts steps whose ONE
+    batched prefill call advanced >= 2 slots' chunks."""
     del smoke
+    from repro.obs.trace import TraceRecorder
     from repro.serve.engine import ServeEngine
 
     cfg, params = _model(False)
     eng = ServeEngine(cfg, params, max_batch=max_batch, s_max=s_max,
-                      page_size=page_size, prefill_chunk=prefill_chunk)
+                      page_size=page_size, prefill_chunk=prefill_chunk,
+                      prefill_slots=prefill_slots)
     warm, warm_arr, _ = _flood_workload(s_max)          # compile warmup
     eng.generate(warm, warm_arr)
     best = None
     for _ in range(max(1, repeats)):
         gaps: list = []
         reqs, arrivals, short_ix = _flood_workload(s_max, gaps)
+        rec = eng.recorder = TraceRecorder()
         eng.generate(reqs, arrivals)
         assert all(r.done for r in reqs)
         rep = eng.metrics.report()
@@ -231,11 +246,56 @@ def run_flood(*, smoke: bool = True, prefill_chunk: int = 16,
         rep["ttft_long_ms"] = 1e3 * reqs[2].ttft_s
         rep["decode_gap_ms_max"] = 1e3 * max(gaps) if gaps else 0.0
         rep["prefill_chunk"] = prefill_chunk
+        rep["prefill_slots_cfg"] = prefill_slots
         rep["prefill_traces"] = eng.prefill_traces
         rep["prefill_buckets_seen"] = sorted(eng.prefill_buckets)
+        rep["multi_prefill_step_records"] = sum(
+            1 for e in rec.events if e.get("name") == "STEP"
+            and len(e["args"].get("prefill_slots") or ()) >= 2)
         if best is None or rep["ttft_short_ms"] < best["ttft_short_ms"]:
             best = rep
     return best
+
+
+def run_resume() -> dict:
+    """True chunk-boundary resume under pool pressure, on the tiny smoke
+    model (the quantities are structural counters, not throughput).  A
+    long prompt admits first into a pool one page short of both requests'
+    needs; the decoder behind it grows and preempts the long MID-PREFILL.
+    The written chunks' pages detach with the queue entry and the replay
+    resumes at the chunk boundary, so total ``prefill_chunk_tokens``
+    equal the prompts' ids exactly — the same number the uncontended run
+    pays — and the fp-page streams stay bit-identical.  Returns both
+    reports plus the gate numbers (``rerun_chunk_tokens`` == tokens
+    re-prefilled beyond the prompts' ids, ``outputs_equal``)."""
+    import jax.numpy as jnp
+    from repro.data import tokenizer as tok
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg, params = _model(True)
+
+    def drive(n_pages):
+        eng = ServeEngine(cfg, params, max_batch=2, s_max=32, page_size=4,
+                          n_pages=n_pages, kv_mode="fp",
+                          cache_dtype=jnp.float32, prefill_chunk=4,
+                          prefix_sharing=False)
+        long = Request("z" * 20, max_new_tokens=4)
+        dec = Request("abc", max_new_tokens=10)
+        eng.generate([long, dec], arrivals=[0, 1])
+        return [r.out_tokens for r in (long, dec)], eng.metrics.report()
+
+    base_toks, base = drive(None)
+    toks, rep = drive(8)                      # 7 usable pages: one short
+    prompt_ids = len(tok.encode("z" * 20)) + len(tok.encode("abc"))
+    return {
+        "resume/tight": rep,
+        "resume/uncontended": base,
+        "prompt_ids": prompt_ids,
+        "preemptions": rep["preemptions"],
+        "prefill_resumes": rep["prefill_resumes"],
+        "rerun_chunk_tokens": rep["prefill_chunk_tokens"] - prompt_ids,
+        "outputs_equal": toks == base_toks,
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -528,6 +588,9 @@ doc = {
     "decode_steps": rep["decode_steps"],
     "decode_trace_count": eng.decode_traces,
     "decode_bucket_count": len(eng.decode_buckets),
+    "prefill_trace_count": eng.prefill_traces,
+    "prefill_chunk_buckets": len({c for c, _ in eng.prefill_buckets}),
+    "prefill_page_buckets": len({p for _, p in eng.prefill_buckets}),
     "elapsed_s": dt,
 }
 print(json.dumps(doc))
@@ -557,6 +620,11 @@ def run_mesh(*, tp: int = 2) -> dict:
     assert rep["kv_shards"] == tp and rep["mesh_devices"] == tp, rep
     assert rep["cache_bytes_per_shard"] * tp == rep["cache_bytes"], rep
     assert rep["decode_trace_count"] == rep["decode_bucket_count"], rep
+    # the multi-slot prefill trace bound holds at every mesh size: the
+    # batched call always runs at the full pool width, so slots never
+    # become a compile axis
+    assert rep["prefill_trace_count"] <= (
+        rep["prefill_chunk_buckets"] * rep["prefill_page_buckets"]), rep
     return rep
 
 
@@ -597,6 +665,10 @@ def main(argv=None) -> int:
     ap.add_argument("--prefill-chunk", type=int, default=16,
                     help="chunked-prefill token budget for the flood case "
                          "(the baseline run uses one whole-prompt chunk)")
+    ap.add_argument("--prefill-slots", type=int, default=2,
+                    help="prefilling slots advanced per step in the flood "
+                         "case, batched into ONE traced call (the "
+                         "multi-slot and anti-starvation gates need >= 2)")
     ap.add_argument("--spec-k", type=int, default=8,
                     help="speculative block width for the repetitive-text "
                          "spec case (1 committed + spec-k - 1 drafted)")
@@ -616,9 +688,11 @@ def main(argv=None) -> int:
     # with live engines): chunked prefill vs the un-chunked baseline (one
     # whole-prompt chunk), same scheduler, same workload
     flood_c = run_flood(smoke=args.smoke, page_size=args.page_size,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        prefill_slots=args.prefill_slots)
     flood_u = run_flood(smoke=args.smoke, page_size=args.page_size,
-                        prefill_chunk=256)
+                        prefill_chunk=256,
+                        prefill_slots=args.prefill_slots)
     results["flood/chunked"] = flood_c
     results["flood/unchunked"] = flood_u
     for name, rep in (("chunked", flood_c), ("unchunked", flood_u)):
@@ -652,14 +726,49 @@ def main(argv=None) -> int:
                 flood_c["ttft_short_wait_tokens"],
                 flood_u["ttft_short_wait_tokens"])
             #    ... and chunking's per-step budget bounds the wait: at
-            #    most one chunk of foreign prefill per step of its window
+            #    most one chunk per prefill SLOT of foreign prefill per
+            #    step of its window
             assert (flood_c["ttft_short_wait_tokens"]
-                    <= args.prefill_chunk * flood_c["ttft_short_steps"]), \
-                flood_c
+                    <= args.prefill_chunk * args.prefill_slots
+                    * flood_c["ttft_short_steps"]), flood_c
         # 4. chunked prefill compiles per (chunk, page) bucket pair at most
         assert flood_c["prefill_traces"] <= (
             len({c for c, _ in flood_c["prefill_buckets_seen"]})
             * len({p for _, p in flood_c["prefill_buckets_seen"]})), flood_c
+        # 5. multi-slot batching engaged: >= one step advanced >= 2 slots'
+        #    chunks in ONE traced call — visible both in the metrics
+        #    counter and directly in the recorded STEP records
+        if args.prefill_slots >= 2:
+            assert flood_c["prefill_multi_steps"] >= 1, flood_c
+            assert flood_c["multi_prefill_step_records"] >= 1, flood_c
+        # 6. aging bound: no prefilling request (the flood prompt included)
+        #    waits more than its own chunk count plus a constant past its
+        #    arrival — the anti-starvation guarantee, on the step clock
+        if not degenerate:
+            assert flood_c["prefill_wait_steps_max"] <= (
+                -(-240 // args.prefill_chunk) + 12), flood_c
+    # true chunk-boundary resume under pool pressure (tiny smoke model;
+    # every gated quantity is a deterministic counter)
+    resume = run_resume()
+    results["resume/compare"] = resume
+    common.emit([("serve/resume", 0.0,
+                  f"resumes={resume['prefill_resumes']}"
+                  f"_preemptions={resume['preemptions']}"
+                  f"_rerun_tokens={resume['rerun_chunk_tokens']}"
+                  f"_outputs_equal={int(resume['outputs_equal'])}")])
+    if args.smoke:
+        # CI gates for the true-resume tentpole:
+        # 1. the tight pool really preempted a mid-prefill slot and the
+        #    replay resumed it instead of restarting it
+        assert resume["preemptions"] >= 1, resume
+        assert resume["prefill_resumes"] >= 1, resume
+        # 2. ZERO written chunks re-ran: total chunk tokens == prompt ids,
+        #    exactly what the uncontended run pays
+        assert resume["rerun_chunk_tokens"] == 0, resume
+        assert (resume["resume/uncontended"]["prefill_chunk_tokens"]
+                == resume["prompt_ids"]), resume
+        # 3. fp-page streams bit-identical through preempt + resume
+        assert resume["outputs_equal"], "resume changed output tokens"
     # self-speculative decoding on repetitive text: n-gram drafts + the
     # batched k-token verify step vs plain one-token decode (always on the
     # tiny smoke model; the step-count ratio is deterministic)
@@ -764,6 +873,7 @@ def main(argv=None) -> int:
         "smoke": args.smoke, "n_requests": n_requests, "rate": args.rate,
         "max_batch": args.max_batch, "s_max": s_max,
         "page_size": args.page_size, "prefill_chunk": args.prefill_chunk,
+        "prefill_slots": args.prefill_slots,
         "spec_k": args.spec_k, "seed": args.seed,
     }
     out = Path(args.json_out)

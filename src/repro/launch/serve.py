@@ -53,9 +53,20 @@ def main(argv=None) -> int:
                     help="total pool pages (default: every slot can hold "
                          "s_max tokens)")
     ap.add_argument("--prefill-chunk", type=int, default=32,
-                    help="per-step prompt-token budget: prompts prefill "
+                    help="per-slot prompt-token budget: prompts prefill "
                          "into pool pages at most this many tokens per "
                          "step, interleaved with the pooled decode")
+    ap.add_argument("--prefill-slots", type=int, default=2,
+                    help="prefilling slots advanced per step: up to this "
+                         "many slots run one chunk each, batched into ONE "
+                         "traced prefill call (the call always runs at the "
+                         "full pool width, so this never adds compiles)")
+    ap.add_argument("--prefill-aging", type=float, default=1.0,
+                    help="anti-starvation credit for the chunk picker: "
+                         "remaining-token equivalents forgiven per step a "
+                         "prompt has waited (0 = pure shortest-remaining-"
+                         "first, which can starve a long prompt under a "
+                         "sustained short-request stream)")
     ap.add_argument("--spec-mode", default="off", choices=["off", "ngram"],
                     help="self-speculative decoding: 'ngram' drafts tokens "
                          "by prompt-lookup over each slot's own history and "
@@ -122,6 +133,8 @@ def main(argv=None) -> int:
     engine_kw = dict(max_batch=args.max_batch, s_max=args.s_max,
                      kv_mode=kv_mode, page_size=args.page_size,
                      n_pages=args.n_pages, prefill_chunk=args.prefill_chunk,
+                     prefill_slots=args.prefill_slots,
+                     prefill_aging=args.prefill_aging,
                      cache_dtype=jnp.bfloat16,
                      spec_mode=args.spec_mode, spec_k=args.spec_k,
                      recorder=recorder, quality=quality, tp=args.tp)
@@ -158,7 +171,11 @@ def main(argv=None) -> int:
           f"{rep['decode_steps']} pooled decode steps "
           f"(batch mean {rep['decode_batch_mean']:.2f}); "
           f"prefill {rep['prefills']} prompts in {rep['prefill_chunks']} "
-          f"chunks (chunk={args.prefill_chunk}, "
+          f"chunks over {rep['prefill_steps']} batched steps "
+          f"(chunk={args.prefill_chunk}, slots={args.prefill_slots}, "
+          f"batch mean {rep['prefill_batch_mean']:.2f}, "
+          f"{rep['prefill_multi_steps']} multi-slot steps, "
+          f"{rep['prefill_resumes']} true resumes, "
           f"{rep['interleaved_steps']} interleaved steps, "
           f"{rep['decode_stall_steps']} stalls); "
           f"ttft mean {rep['ttft_ms_mean']:.0f} ms; "

@@ -366,33 +366,55 @@ def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     (``repro.serve``'s admission path; there is no dense ``[1, T]`` prefill
     cache anymore).
 
-    x [1, C, d] — one chunk of ONE request's prompt (C is the scheduler's
-    bucketed chunk shape; the tail beyond the chunk's valid tokens is
-    padding).  ``cache`` holds one layer's page pool plus routing state:
+    x [b, C, d] — per prefilling slot, one chunk of that slot's prompt (C
+    is the scheduler's bucketed chunk shape; the tail beyond a slot's valid
+    tokens is padding, and slots not advancing this step are all-padding
+    rows).  ``cache`` holds one layer's page pool plus routing state:
 
       k/v          [n_pages, ps, kvh, dh]  (int8 pages carry
       k/v_scale    [n_pages, ps, kvh, 1]   per-(pos, head) scales)
-      page_table   [pages] int32 — the PREFILLING slot's page-table row,
-                   sliced to the step's bucketed page budget
-      start        [] int32 — absolute position of the chunk's first token
-      write_lo/hi  [] int32 — absolute position window whose K/V lands in
-                   table pages; everything else (chunk padding, positions
-                   already covered by prefix-shared pages) routes to the
-                   reserved scratch page 0 and is never read back
+      page_table   [b, pages] int32 — the prefilling slots' page-table
+                   rows, sliced to the step's bucketed page budget (rows
+                   of idle slots are all scratch page 0)
+      start        [b] int32 — absolute position of each slot's chunk's
+                   first token
+      write_lo/hi  [b] int32 — per-slot absolute position window whose K/V
+                   lands in table pages; everything else (chunk padding,
+                   positions already covered by prefix-shared pages, idle
+                   slots with an empty ``write_lo == write_hi`` window)
+                   routes to the reserved scratch page 0 and is never
+                   read back
 
-    The chunk's K/V is scattered into its pages FIRST, then attention reads
-    the whole logical key range [0, pages*ps) through the page table with a
-    start-offset causal mask (``q_offset=start``) — so a query only ever
-    sees keys at positions <= its own, which earlier chunks (or the shared
-    prefix) already wrote.  Masked lanes underflow to exactly 0 in the
-    softmax, so fp pages at the compute dtype reproduce the old full-prompt
-    dense prefill bit for bit (the parity oracle the serve tests pin)."""
+    Each slot's chunk K/V is scattered into its pages FIRST (one
+    shape-stable ``[slot, C]`` scatter — the same query-block trick as
+    :func:`attention_verify_paged`), then ONE kernel call attends every
+    slot's whole logical key range through the page table with a per-slot
+    start-offset causal mask — so a query only ever sees keys at positions
+    <= its own, which earlier chunks (or the shared prefix) already wrote.
+    Slots' write windows are disjoint (each covers only pages that slot
+    exclusively owns), so batching N slots into one call is bit-identical
+    to running them sequentially.  Masked lanes underflow to exactly 0 in
+    the softmax, so fp pages at the compute dtype reproduce the old
+    full-prompt dense prefill bit for bit (the parity oracle the serve
+    tests pin).
+
+    Back compat: a 1-D ``page_table`` [pages] with scalar
+    ``start``/``write_lo``/``write_hi`` (the pre-multi-slot single-request
+    form) is normalized to the batched shapes with b=1."""
     sq = sq or {}
     b, C, d = x.shape
     ps = cache["k"].shape[1]
-    start = cache["start"]
-    page_table = cache["page_table"]                        # [P]
-    n_pages_budget = page_table.shape[0]
+    start = jnp.asarray(cache["start"], jnp.int32)
+    write_lo = jnp.asarray(cache["write_lo"], jnp.int32)
+    write_hi = jnp.asarray(cache["write_hi"], jnp.int32)
+    page_table = cache["page_table"]
+    if page_table.ndim == 1:                                # legacy [P] form
+        page_table = page_table[None]
+    if start.ndim == 0:
+        start = jnp.reshape(start, (1,))
+        write_lo = jnp.reshape(write_lo, (1,))
+        write_hi = jnp.reshape(write_hi, (1,))
+    n_pages_budget = page_table.shape[1]
     qkv = ctx("attn_qkv", x, p["wqkv"], mask=sq.get("attn_qkv"),
               smooth=sq.get("attn_qkv@smooth"), fused=sq.get("attn_qkv@fused"))
     if "bqkv" in p:
@@ -403,41 +425,43 @@ def attention_prefill_paged(cfg: ModelConfig, p: dict, ctx, x: jnp.ndarray,
     shard = TP.active()
     if shard is not None:
         q, k, v = (TP.slice_heads(t, shard) for t in (q, k, v))
-    p_abs = start + jnp.arange(C, dtype=jnp.int32)          # [C] absolute pos
-    positions = jnp.broadcast_to(p_abs[None], (b, C))
+    p_abs = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None]   # [b, C]
+    positions = p_abs
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
 
     quantizer = kvq.from_cache(cache)
     parts = quantizer.quantize(k, v)
 
-    # scatter the chunk's K/V into the slot's pages.  Positions outside the
-    # write window (chunk tail padding past the prompt, prefix-shared
-    # positions whose pages are mapped read-only) route to scratch page 0,
-    # which is never read back — same trick as the pooled decode's inactive
-    # slots, so the write is one shape-stable scatter with no control flow.
-    writable = (p_abs >= cache["write_lo"]) & (p_abs < cache["write_hi"])
+    # scatter every slot's chunk K/V into its pages.  Positions outside a
+    # slot's write window (chunk tail padding past the prompt, prefix-shared
+    # positions whose pages are mapped read-only, idle slots' empty windows)
+    # route to scratch page 0, which is never read back — same trick as the
+    # pooled decode's inactive slots, so the write is one shape-stable
+    # [slot, C] scatter with no control flow.
+    writable = (p_abs >= write_lo[:, None]) & (p_abs < write_hi[:, None])
     logical = jnp.clip(p_abs // ps, 0, n_pages_budget - 1)
-    page_idx = jnp.where(writable, page_table[logical], 0)
+    page = jnp.take_along_axis(page_table, logical, axis=1)         # [b, C]
+    page_idx = jnp.where(writable, page, 0)
     offset = p_abs % ps
     new_cache = _write_cache(cache, {
         n: cache[n].at[page_idx, offset].set(
-            parts[n][0].astype(cache[n].dtype)) for n in parts})
+            parts[n].astype(cache[n].dtype)) for n in parts})
 
-    # read the whole logical key range [0, pages*ps) through the page table
-    # with the start-offset causal mask — the same [slot, sq] query-block
-    # kernel as decode/verify, with b=1, sq=C and pos=[start].  On CPU the
-    # jnp gather reference reproduces the old gather→dequantize→sdpa op
-    # sequence exactly (extra gathered keys past a query's position are
-    # NEG_INF-masked and underflow to exactly 0, so fp pages stay
-    # bit-exact); on TPU/interpret the flash-style Pallas kernel streams
-    # key pages through scalar prefetch with online softmax and in-kernel
-    # int8 / int4-nibble dequant + inverse outlier redistribution.
+    # read every slot's whole logical key range [0, pages*ps) through the
+    # page table with the per-slot start-offset causal mask — the same
+    # [slot, sq] query-block kernel as decode/verify, with sq=C and
+    # pos=start [b].  On CPU the jnp gather reference reproduces the old
+    # gather→dequantize→sdpa op sequence exactly (extra gathered keys past
+    # a query's position are NEG_INF-masked and underflow to exactly 0, so
+    # fp pages stay bit-exact); on TPU/interpret the flash-style Pallas
+    # kernel streams key pages through scalar prefetch with online softmax
+    # and in-kernel int8 / int4-nibble dequant + inverse outlier
+    # redistribution.
     win = jnp.where(jnp.asarray(window_flag), cfg.window_size,
                     PA.NO_WINDOW).astype(jnp.int32)
     o = PA.paged_attention_decode(
-        q, new_cache["k"], new_cache["v"], page_table[None],
-        jnp.reshape(start, (1,)).astype(jnp.int32),
+        q, new_cache["k"], new_cache["v"], page_table, start,
         window=win, softcap=cfg.attn_softcap,
         **quantizer.kernel_operands(new_cache))
     if shard is not None:

@@ -677,26 +677,32 @@ def decode_verify_paged(cfg: ModelConfig, params, tokens, kv: dict,
 def prefill_chunk_paged(cfg: ModelConfig, params, tokens, kv: dict,
                         page_table, start, write_lo, write_hi, ctx=None, *,
                         qparams=None) -> Tuple[jnp.ndarray, dict]:
-    """One chunk of ONE request's prompt prefilled straight into the paged
-    KV pool (``repro.serve``) — the serving engine's only prefill path;
-    there is no dense ``[1, T]`` prefill cache.
+    """One chunk per prefilling slot, for SEVERAL slots at once, prefilled
+    straight into the paged KV pool in ONE traced call (``repro.serve``) —
+    the serving engine's only prefill path; there is no dense ``[1, T]``
+    prefill cache.
 
-    tokens [1, C] (C = the scheduler's bucketed chunk shape; ids past the
-    chunk's valid tokens are padding); ``kv`` = {"k"/"v":
-    [L, n_pages, ps, kvh, dh]} (int8 pages add "k_scale"/"v_scale");
-    ``page_table`` [pages] int32 is the prefilling slot's table row sliced
-    to the bucketed page budget; ``start`` / ``write_lo`` / ``write_hi``
-    are traced int32 scalars (chunk start position and the absolute
-    position window whose K/V is written to pages — see
-    :func:`repro.models.attention.attention_prefill_paged`).
+    tokens [b, C] (C = the scheduler's bucketed chunk shape; ids past a
+    slot's valid tokens are padding, and slots not advancing this step are
+    all-padding rows); ``kv`` = {"k"/"v": [L, n_pages, ps, kvh, dh]} (int8
+    pages add "k_scale"/"v_scale"); ``page_table`` [b, pages] int32 is the
+    prefilling slots' table rows sliced to the bucketed page budget;
+    ``start`` / ``write_lo`` / ``write_hi`` are traced int32 [b] vectors
+    (per-slot chunk start position and the absolute position window whose
+    K/V is written to pages — idle slots carry an empty window; see
+    :func:`repro.models.attention.attention_prefill_paged`, which also
+    keeps the legacy 1-slot scalar/1-D form working).
 
-    Returns (logits [1, C, V], updated kv dict).  Because a chunk's queries
+    Returns (logits [b, C, V], updated kv dict).  Because a chunk's queries
     only attend to positions <= their own — already in pages from earlier
     chunks or the shared prefix — chunks need NO hidden-state carry between
-    them: the scheduler can interleave one chunk per step with the pooled
-    decode.  Shapes are static per (chunk bucket, page bucket) pair, so the
-    step compiles once per pair, never per prompt length.  Dense/MoE only
-    (the families ``ServeEngine`` serves)."""
+    them: the scheduler can interleave one batched multi-slot chunk step
+    per step with the pooled decode.  Slots' page write windows are
+    disjoint, so the batched call is bit-identical to prefilling the same
+    chunks one slot at a time.  Shapes are static per (chunk bucket, page
+    bucket) pair, so the step compiles once per pair, never per prompt
+    length or per number of advancing slots.  Dense/MoE only (the families
+    ``ServeEngine`` serves)."""
     ctx = ctx or FpCtx()
     if cfg.family not in ("dense", "moe"):
         raise ValueError(f"paged prefill supports dense/moe, not {cfg.family}")

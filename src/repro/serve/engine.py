@@ -93,17 +93,24 @@ class ServeEngine:
     ``cache_dtype`` (default bf16) sets the fp-page dtype — fp serving no
     longer pays a 2x fp32 cache tax.
 
-    Prefill is **chunked and paged**: prompts are admitted into pool pages
-    and prefilled ``prefill_chunk`` tokens at a time
+    Prefill is **chunked, paged, and multi-slot**: prompts are admitted
+    into pool pages and prefilled ``prefill_chunk`` tokens at a time
     (:func:`repro.models.transformer.prefill_chunk_paged`), each chunk
     writing its K/V straight into the slot's pages — there is no dense
-    ``[1, T]`` prefill cache, and the scheduler interleaves one chunk per
-    step with the pooled decode so a long-prompt flood never stalls live
-    decode slots for more than one chunk's worth of compute.  Chunk shapes
-    bucket to powers of two like decode page budgets, so the chunked
-    prefill compiles once per (chunk-bucket, page-bucket) pair
-    (``prefill_traces`` / ``prefill_buckets`` mirror ``decode_traces`` /
-    ``decode_buckets``).
+    ``[1, T]`` prefill cache.  Each step, up to ``prefill_slots``
+    prefilling slots advance one chunk each in ONE traced call (a
+    ``[slot, chunk]`` block over the page table, always at the full pool
+    width so the knob never changes traced shapes), interleaved with the
+    pooled decode so a long-prompt flood never stalls live decode slots
+    for more than one chunk step's worth of compute.  The chunk picker is
+    shortest-remaining-first with an **aging** term (``prefill_aging``
+    steps-waited credit per step) so a long prompt can't starve under a
+    sustained short-request stream; preempted mid-prefill slots **resume
+    from the true chunk boundary** (their already-written pages are kept
+    across preemption, never re-run).  Chunk shapes bucket to powers of
+    two like decode page budgets, so the chunked prefill compiles once
+    per (chunk-bucket, page-bucket) pair (``prefill_traces`` /
+    ``prefill_buckets`` mirror ``decode_traces`` / ``decode_buckets``).
 
     **Self-speculative decoding** (``spec_mode="ngram"``, default off):
     the scheduler drafts up to ``spec_k - 1`` tokens per live slot by
@@ -121,6 +128,7 @@ class ServeEngine:
                  kv_mode: Optional[str] = None, page_size: int = 16,
                  n_pages: Optional[int] = None, cache_dtype=jnp.bfloat16,
                  prefix_sharing: bool = True, prefill_chunk: int = 32,
+                 prefill_slots: int = 2, prefill_aging: float = 1.0,
                  spec_mode: str = "off", spec_k: int = 4,
                  recorder=None, quality=None, tp: Optional[int] = None):
         assert cfg.family in ("dense", "moe"), "engine supports decoder-only LMs"
@@ -169,6 +177,17 @@ class ServeEngine:
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = int(prefill_chunk)
+        # multi-slot prefill: up to prefill_slots prefilling slots advance
+        # one chunk each per step, batched into ONE traced call (the step
+        # always runs at the full [n_slots, C] width, so the knob never
+        # changes traced shapes); prefill_aging biases the chunk picker
+        # toward long-waiting prompts (0 = pure shortest-remaining-first)
+        if prefill_slots < 1:
+            raise ValueError(f"prefill_slots must be >= 1, got {prefill_slots}")
+        if prefill_aging < 0:
+            raise ValueError(f"prefill_aging must be >= 0, got {prefill_aging}")
+        self.prefill_slots = int(prefill_slots)
+        self.prefill_aging = float(prefill_aging)
         # tensor-parallel serving: tp > 1 builds a ("model",) mesh, the pool
         # allocates its pages/scales/redist rows sharded on the kvh axis,
         # and the jit'd steps below wrap in shard_map.  tp=None/1 keeps the
@@ -299,7 +318,7 @@ class ServeEngine:
     # -- scheduler plumbing ---------------------------------------------------
 
     def _prefill_pool(self, tokens, kv, page_table, start, write_lo, write_hi):
-        bucket = (int(tokens.shape[1]), int(page_table.shape[0]))
+        bucket = (int(tokens.shape[1]), int(page_table.shape[1]))
         self.prefill_buckets.add(bucket)
         before = self.prefill_traces
         out = self._prefill_step(self.params, tokens, kv, page_table,
@@ -349,6 +368,8 @@ class ServeEngine:
                          self._verify_pool, metrics=self._fresh_metrics(),
                          prefix_sharing=self.prefix_sharing,
                          prefill_chunk=self.prefill_chunk,
+                         prefill_slots=self.prefill_slots,
+                         prefill_aging=self.prefill_aging,
                          spec_mode=self.spec_mode, spec_k=self.spec_k,
                          recorder=self.recorder, quality=self.quality)
 

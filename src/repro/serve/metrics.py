@@ -38,8 +38,16 @@ _COUNTERS = (
     "decode_steps",        # pooled decode step invocations
     "decode_slot_steps",   # sum of active slots over decode steps
     "prefills",            # prompts fully prefilled (chunked)
-    "prefill_chunks",      # chunked-prefill step invocations
+    "prefill_chunks",      # per-slot chunks advanced (N slots in one traced
+                           # call count N — the pre-multi-slot meaning)
     "prefill_chunk_tokens",  # valid prompt tokens prefilled via chunks
+    "prefill_steps",       # traced multi-slot prefill invocations (<= chunks)
+    "prefill_multi_steps",  # prefill steps advancing >= 2 slots at once
+    "prefill_resumes",     # mid-prefill preemptions resumed from the true
+                           # chunk boundary (kept pages, zero chunks re-run)
+    "prefill_wait_steps_max",  # worst step-clock age a prompt reached while
+                               # still prefilling — the anti-starvation
+                               # bound the aging term exists to cap
     "interleaved_steps",   # steps running a prefill chunk AND decode
     "decode_stall_steps",  # steps where live decode slots got no decode
     # self-speculative decoding (all deterministic: argmax verify)
@@ -188,6 +196,14 @@ class ServeMetrics:
             "prefill_chunk_tokens": self.prefill_chunk_tokens,
             "prefill_chunks_per_prompt": (self.prefill_chunks / self.prefills
                                           if self.prefills else 0.0),
+            # additive since PR 10 (multi-slot prefill): batching shape,
+            # true-resume count, and the starvation face the aging bounds
+            "prefill_steps": self.prefill_steps,
+            "prefill_multi_steps": self.prefill_multi_steps,
+            "prefill_batch_mean": (self.prefill_chunks / self.prefill_steps
+                                   if self.prefill_steps else 0.0),
+            "prefill_resumes": self.prefill_resumes,
+            "prefill_wait_steps_max": self.prefill_wait_steps_max,
             "interleaved_steps": self.interleaved_steps,
             "decode_stall_steps": self.decode_stall_steps,
             "spec_verify_steps": self.spec_verify_steps,

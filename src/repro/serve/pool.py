@@ -246,6 +246,69 @@ class PagePool:
         self._table_device = None
         return True
 
+    def detach_prefix(self, slot: int, n_tokens: int) -> list:
+        """Transfer ownership of the pages covering positions [0, n_tokens)
+        OUT of ``slot`` and release the rest of its pages.  The returned
+        page ids (logical order) keep their refcounts — the caller now
+        holds one reference per page and must hand them back via
+        :meth:`readmit` or drop them via :meth:`drop_detached`.
+
+        This is the true-chunk-boundary resume seam: a preempted
+        mid-prefill slot's already-written prefill pages stay alive across
+        requeue, so the eventual replay re-runs ZERO chunks.  Kept pages
+        may include prefix-shared ones (refcount > 1) — the reference
+        simply survives detached, exactly as it would have in the table."""
+        keep = self.pages_needed(n_tokens) if n_tokens > 0 else 0
+        kept = [int(p) for p in self.page_table[slot, :keep] if p]
+        # zero the kept mappings WITHOUT decref (ownership moves to the
+        # caller), then release whatever remains normally
+        self.page_table[slot, :keep] = 0
+        self.release(slot)
+        return kept
+
+    def readmit(self, slot: int, n_tokens: int, pages: list) -> bool:
+        """Re-admit a slot whose first ``len(pages)`` logical pages are
+        PREMAPPED (:meth:`detach_prefix`'s kept pages — the caller's
+        references move back into the table, no refcount change),
+        allocating fresh pages only for the remainder of [0, n_tokens).
+        Returns False (installing nothing, references untouched) when the
+        pool lacks free pages for the remainder."""
+        assert not self.page_table[slot].any(), f"slot {slot} already has pages"
+        need = self.pages_needed(n_tokens)
+        if need > self.pages_per_slot:
+            raise ValueError(
+                f"{n_tokens} tokens need {need} pages > pages_per_slot="
+                f"{self.pages_per_slot} (raise s_max or page_size)")
+        k = len(pages)
+        assert k <= need, (k, need, "detached pages exceed the prompt's span")
+        if need - k > len(self._free):
+            self.alloc_failures += 1
+            return False
+        for j, pid in enumerate(pages):
+            assert self.refcount[pid] > 0, (pid, "readmit of a freed page")
+            self.page_table[slot, j] = pid
+        for j in range(k, need):
+            pid = self._free.pop()
+            self.page_table[slot, j] = pid
+            self.refcount[pid] = 1
+        self.alloc_count += need - k
+        self._table_device = None
+        return True
+
+    def drop_detached(self, pages: list) -> int:
+        """Drop the caller's references on :meth:`detach_prefix`'d pages (a
+        resume that will never happen — run teardown, or kept pages
+        reclaimed to un-wedge an exhausted pool).  Returns the number of
+        pages actually freed (shared pages survive with their sibling)."""
+        freed = []
+        for p in pages:
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0:
+                freed.append(int(p))
+        self._free.extend(reversed(freed))
+        self.free_count += len(freed)
+        return len(freed)
+
     def release(self, slot: int) -> int:
         """Drop every page mapping owned by ``slot``; pages whose refcount
         hits zero return to the free list.  Returns the number of pages

@@ -12,18 +12,26 @@ The scheduler owns the serving control loop the engine used to inline:
     prefill then *skips both recompute and rewrite* of the shared
     positions — it starts at the first uncovered position and attends over
     the mapped pages;
-  * **chunked paged prefill, interleaved with decode** — each step runs at
-    most ``prefill_chunk`` prompt tokens for at most ONE prefilling slot
-    (:func:`repro.models.transformer.prefill_chunk_paged` writes the
-    chunk's K/V straight into pool pages; there is no dense ``[1, T]``
-    prefill cache) *alongside* the pooled decode step, so a long-prompt
-    flood never stalls live decode slots for more than one chunk's worth
-    of compute.  Among prefilling slots, the one with the fewest remaining
-    prompt tokens goes first (shortest-remaining-first), so short requests
-    keep a low TTFT under a long-prompt flood instead of queueing behind
-    every long prompt's full prefill.  Chunk token counts bucket to powers
-    of two (like decode page budgets), so the chunked prefill compiles
-    once per (chunk-bucket, page-bucket) pair, never per prompt length;
+  * **multi-slot chunked paged prefill, interleaved with decode** — each
+    step advances up to ``prefill_slots`` prefilling slots by one
+    ``prefill_chunk``-token chunk each, batched into ONE traced call
+    (:func:`repro.models.transformer.prefill_chunk_paged` scatters every
+    slot's chunk K/V straight into pool pages over a ``[slot, chunk]``
+    block; there is no dense ``[1, T]`` prefill cache) *alongside* the
+    pooled decode step, so a long-prompt flood neither stalls live decode
+    slots nor serializes prompt work one slot at a time.  The call always
+    runs at the full ``[n_slots, C]`` pool width — slots not advancing
+    get zeroed table rows and empty write windows routing to the scratch
+    page — so the slot count never enters the traced shapes.  The chunk
+    picker is shortest-remaining-first with an **aging** credit
+    (``prefill_aging`` remaining-tokens per waited step, admission order
+    as the tie-break): short requests keep a low TTFT under a long-prompt
+    flood, while the aging term bounds how long a long prompt can starve
+    under a sustained short-request stream (``prefill_aging=0`` recovers
+    pure SRF).  Chunk token counts bucket to powers of two (like decode
+    page budgets), so the chunked prefill compiles once per
+    (chunk-bucket, page-bucket) pair, never per prompt length or per
+    number of advancing slots;
   * **one jit'd decode per step for the WHOLE pool** — slot positions ride
     a per-slot vector into :func:`repro.models.transformer.decode_step_paged`,
     so misaligned sequences batch instead of falling back to per-slot
@@ -47,8 +55,15 @@ The scheduler owns the serving control loop the engine used to inline:
     resumes at a chunk boundary and never stalls the pool either.  With fp
     pages at the compute dtype the replay reproduces the evicted cache bit
     for bit; with int8 pages it is approximate (within quantization
-    noise).  A slot preempted mid-prefill restarts its prefill from the
-    first chunk on resume;
+    noise).  A slot preempted MID-PREFILL resumes from the **true chunk
+    boundary**: its already-written prefill pages are detached from the
+    slot (refcounts kept — :meth:`repro.serve.pool.PagePool.detach_prefix`)
+    and travel with the queue entry, so re-admission re-installs them and
+    the replay re-runs ZERO chunks — and because nothing is recomputed,
+    the resumed stream is bit-exact in EVERY page mode, not just fp.
+    Detached reservations are the first thing reclaimed if the pool wedges
+    with nothing live to evict (the owning request then falls back to
+    replay-from-chunk-0);
   * **self-speculative decoding** (``spec_mode="ngram"``) — a host-side
     prompt-lookup proposer drafts up to ``spec_k - 1`` tokens per live
     slot from its own prompt+output history (:mod:`repro.serve.spec`);
@@ -110,25 +125,43 @@ class _Slot:
     req: object                 # repro.serve.engine.Request
     submit_t: float
     ids: np.ndarray             # the token ids this slot prefills with
-    arrive_step: int            # step clock when the request arrived
+    arrive_step: int            # step clock when the request FIRST arrived
     seq: int                    # admission order (prefill SRF tie-break)
     prefilling: bool = True     # still running chunked prefill
     pre_pos: int = 0            # next prompt position to compute
     pre_start: int = 0          # where this slot's chunked compute began
     write_from: int = 0         # first position NOT covered by shared pages
-    tokens_at_arrival: int = 0  # metrics.prefill_chunk_tokens at arrival
     # full known token stream (prompt + generated), the n-gram proposer's
     # lookup corpus — the last entry is the next decode input
     hist: List[int] = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class _QEntry:
+    """One queued (or requeued) request plus everything its eventual
+    admission needs.  First-arrival state (``submit_t`` / ``arrive_step``)
+    is stamped once when the arrival step is reached and survives
+    preemption requeues untouched — the replay-invariant TTFT face derives
+    from it, never from replay-time snapshots."""
+    req: object
+    arrive: int                     # arrival-step gate (0 for requeues)
+    submit_t: Optional[float] = None  # wall clock at first arrival
+    arrive_step: int = 0            # step clock at first arrival
+    # mid-prefill true resume: (detached page ids, pre_pos, write_from) —
+    # the pages covering [0, pre_pos) stay alive (refcounts held by this
+    # entry) so the replay re-runs zero chunks.  None = plain admission.
+    resume: Optional[tuple] = None
+
+
 class Scheduler:
     """Drives a request set to completion against one :class:`PagePool`.
 
-    ``prefill_fn(tokens, kv, page_table, start, write_lo, write_hi) ->
-    (next_tokens [1, C], new_kv)`` runs one bucketed chunk of one slot's
-    prompt against the paged pool (the engine binds params/ctx/qparams and
-    jits per bucket pair).  ``decode_fn(tokens, kv, page_table, pos) ->
+    ``prefill_fn(tokens [n_slots, C], kv, page_table [n_slots, pb],
+    start, write_lo, write_hi — all [n_slots] int32) ->
+    (next_tokens [n_slots, C], new_kv)`` runs one bucketed chunk for each
+    chosen prefilling slot against the paged pool in ONE call (the engine
+    binds params/ctx/qparams and jits per (chunk, page) bucket pair;
+    idle rows carry zeroed tables and empty write windows).  ``decode_fn(tokens, kv, page_table, pos) ->
     (next_tokens, new_kv)`` is the jit'd pool-wide step; ``page_table``
     arrives sliced to the step's page budget — the kernel side reads the
     budget off the table's shape.  ``verify_fn(tokens [b, k], kv,
@@ -143,6 +176,8 @@ class Scheduler:
                  metrics: Optional[ServeMetrics] = None,
                  prefix_sharing: bool = True,
                  prefill_chunk: int = 32,
+                 prefill_slots: int = 2,
+                 prefill_aging: float = 1.0,
                  spec_mode: str = "off",
                  spec_k: int = 4,
                  recorder=None,
@@ -165,6 +200,16 @@ class Scheduler:
         if prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got {prefill_chunk}")
         self.prefill_chunk = int(prefill_chunk)
+        if prefill_slots < 1:
+            raise ValueError(f"prefill_slots must be >= 1, got {prefill_slots}")
+        if prefill_aging < 0:
+            raise ValueError(f"prefill_aging must be >= 0, got {prefill_aging}")
+        # up to prefill_slots prefilling slots advance one chunk each per
+        # step, in ONE traced call at the full pool width (the knob never
+        # changes traced shapes); prefill_aging is the anti-starvation
+        # credit: remaining-token equivalents forgiven per waited step
+        self.prefill_slots = int(prefill_slots)
+        self.prefill_aging = float(prefill_aging)
         if spec_mode not in spec.SPEC_MODES:
             raise ValueError(f"unknown spec_mode {spec_mode!r} "
                              f"(expected one of {spec.SPEC_MODES})")
@@ -180,6 +225,13 @@ class Scheduler:
         self.pos = np.zeros(n, np.int32)        # per-slot live decode length
         self.last_tok = np.zeros(n, np.int32)
         self._admit_seq = 0
+        # first-arrival accounting, keyed by request identity and written
+        # exactly once per request: the global prefill-token clock at
+        # arrival plus the request's OWN chunk tokens across every attempt.
+        # ttft_prefill_tokens derives from these, so preemption replays
+        # can never double-count into the CI-gated TTFT face.
+        self._first: dict = {}
+        self._qw_stamped: set = set()   # id(req): queue_wait observed once
 
     # -- public --------------------------------------------------------------
 
@@ -208,7 +260,7 @@ class Scheduler:
         for req in requests:
             self._rids.setdefault(id(req), len(self._rids))
         queue = collections.deque(
-            [req, int(arr), None, 0, 0] for req, arr in
+            _QEntry(req, int(arr)) for req, arr in
             sorted(zip(requests, arrivals), key=lambda p: p[1]))
         m.submitted += len(requests)
         step_clock = 0
@@ -217,12 +269,17 @@ class Scheduler:
             self._run_loop(queue, step_clock)
         except BaseException:
             # never leave the (engine-persistent) pool dirty: drop every
-            # live slot so later generate() calls start from a clean pool
+            # live slot AND every queued entry's detached page reservation
+            # so later generate() calls start from a clean pool
             for i, s in enumerate(self.slots):
                 if s is not None:
                     self.pool.release(i)
                     self.slots[i] = None
                     self.pos[i] = 0
+            for e in queue:
+                if e.resume is not None:
+                    self.pool.drop_detached(e.resume[0])
+                    e.resume = None
             raise
         m.stop()
         return list(requests)
@@ -236,12 +293,16 @@ class Scheduler:
             # generator's arrival schedule would inflate the queueing delay
             now = None
             for entry in queue:
-                if entry[2] is None and entry[1] <= step_clock:
-                    entry[2] = now = now or time.perf_counter()
-                    entry[3] = step_clock
-                    entry[4] = m.prefill_chunk_tokens
+                if entry.submit_t is None and entry.arrive <= step_clock:
+                    entry.submit_t = now = now or time.perf_counter()
+                    entry.arrive_step = step_clock
+                    # first-arrival snapshot: the global prefill-token
+                    # clock now, plus an own-token accumulator — the
+                    # replay-invariant basis for ttft_prefill_tokens
+                    self._first[id(entry.req)] = {
+                        "tok0": m.prefill_chunk_tokens, "own": 0}
                     if rec.enabled:
-                        rid = self._rids[id(entry[0])]
+                        rid = self._rids[id(entry.req)]
                         rec.instant(rid, "QUEUED", "SUBMITTED", step_clock)
                         rec.begin(rid, "QUEUED", step_clock)
             self._admit(queue, step_clock)
@@ -254,10 +315,11 @@ class Scheduler:
                 break
 
             cow0 = self.pool.cow_count      # step-record COW delta baseline
-            # at most ONE prefilling slot advances by at most one chunk —
-            # the per-step prompt-token budget that keeps decode flowing
-            # under a long-prompt flood.  Returns the chunk's step-record
-            # info (slot + buckets) or None; truthiness = "a chunk ran".
+            # up to prefill_slots prefilling slots advance one chunk each,
+            # batched into ONE traced call — the per-step prompt-token
+            # budget that keeps decode flowing under a long-prompt flood
+            # without serializing prompt work.  Returns the step-record
+            # info (slots + buckets) or None; truthiness = "chunks ran".
             did_prefill = self._prefill_chunk_step(step_clock)
             # n-gram drafts first (host-side, no pool effects), so the
             # page-backing pass can cover each slot's whole k-token write
@@ -328,11 +390,13 @@ class Scheduler:
                 # one scheduler record per active step: what ran and what
                 # it cost — the trace's answer to "what was step N doing"
                 pf = did_prefill or {}
+                pf_slots = pf.get("slots", [])
                 rec.step_record(
                     step_clock, decode_ran=decode_ran, slots=len(active),
                     page_bucket=bucket if decode_ran else 0,
                     verify_k=verify_k or 0,
-                    prefill_slot=pf.get("slot"),
+                    prefill_slots=pf_slots,
+                    prefill_slot=pf_slots[0] if pf_slots else None,
                     chunk_bucket=pf.get("chunk_bucket", 0),
                     prefill_page_bucket=pf.get("page_bucket", 0),
                     cow=self.pool.cow_count - cow0)
@@ -399,19 +463,36 @@ class Scheduler:
         write_from = len(ids) if partial else n_full * ps
         return best, n_share, write_from, False
 
+    def _reclaim_detached(self, queue) -> bool:
+        """Drop the largest detached-page reservation among queued entries
+        (its request reverts to replay-from-chunk-0) — the last-resort
+        valve when admission finds the pool exhausted with nothing live to
+        preempt.  Returns True when a reservation was dropped."""
+        best = None
+        for e in queue:
+            if e.resume is not None and (
+                    best is None or len(e.resume[0]) > len(best.resume[0])):
+                best = e
+        if best is None:
+            return False
+        self.pool.drop_detached(best.resume[0])
+        best.resume = None
+        return True
+
     def _admit(self, queue, step_clock: int) -> None:
-        while queue and queue[0][1] <= step_clock:
+        while queue and queue[0].arrive <= step_clock:
             free = [i for i, s in enumerate(self.slots) if s is None]
             if not free:
                 return
-            req, _, submit_t, arrive_step, tokens_at_arrival = queue[0]
+            entry = queue[0]
+            req = entry.req
             ids = self._request_ids(req)
             if len(ids) + 1 > self.pool.capacity:
                 if req.out_tokens:      # resumed at capacity: done, truncated
                     queue.popleft()
                     req.done = True
                     self.metrics.completed += 1
-                    self._stamp_finish(req, arrive_step, step_clock)
+                    self._stamp_finish(req, entry.arrive_step, step_clock)
                     if self.rec.enabled:
                         rid = self._rids[id(req)]
                         self.rec.end(rid, "QUEUED", step_clock)
@@ -422,39 +503,61 @@ class Scheduler:
                     f"prompt of {len(ids)} tokens exceeds slot capacity "
                     f"{self.pool.capacity - 1} (raise s_max)")
             slot = free[0]
-            src, n_share, write_from, pending = self._shared_prefix(ids)
-            if pending:
-                return              # FIFO: wait for the source's chunks
-            if not self.pool.admit(slot, len(ids), share_from=src,
-                                   shared_pages=n_share):
+            resume_from = None
+            if entry.resume is not None:
+                # true chunk-boundary resume: the entry's detached pages
+                # (already holding [0, pre_pos)'s K/V) re-install at the
+                # same logical positions; only the remainder allocates
+                src, n_share = None, 0
+                kept, r_pre, write_from = entry.resume
+                admitted = self.pool.readmit(slot, len(ids), kept)
+                if admitted:
+                    entry.resume = None     # references moved to the table
+                    resume_from = r_pre
+                    self.metrics.prefill_resumes += 1
+            else:
+                src, n_share, write_from, pending = self._shared_prefix(ids)
+                if pending:
+                    return          # FIFO: wait for the source's chunks
+                admitted = self.pool.admit(slot, len(ids), share_from=src,
+                                           shared_pages=n_share)
+            if not admitted:
                 if not any(self.slots):
+                    # nothing live to preempt: reclaim detached page
+                    # reservations (largest first) before giving up —
+                    # dropping one reverts that request to a plain replay
+                    if self._reclaim_detached(queue):
+                        continue        # retry with the freed pages
                     raise ValueError(
                         f"pool exhausted with no live sequences: {len(ids)} "
                         f"tokens need {self.pool.pages_needed(len(ids))} "
                         f"pages, {self.pool.pages_free} free")
                 return                  # FIFO: wait for pages, don't skip
             queue.popleft()
-            st = _Slot(req, submit_t, ids, arrive_step, self._admit_seq,
-                       tokens_at_arrival=tokens_at_arrival)
+            st = _Slot(req, entry.submit_t, ids, entry.arrive_step,
+                       self._admit_seq)
             self._admit_seq += 1
             fresh0 = not req.out_tokens
-            if fresh0 and getattr(req, "queue_wait_steps", None) is None:
-                # queue wait (submit -> FIRST admission; a mid-prefill
-                # preemption replay does not re-stamp) — the latency
-                # component TTFT means hide
+            if fresh0 and id(req) not in self._qw_stamped:
+                # queue wait (submit -> FIRST admission; a preemption
+                # replay never re-stamps OR re-observes — the stamped-set
+                # guards duck-typed requests without the attribute too) —
+                # the latency component TTFT means hide
+                self._qw_stamped.add(id(req))
                 try:
-                    req.queue_wait_steps = step_clock - arrive_step
+                    req.queue_wait_steps = step_clock - entry.arrive_step
                 except AttributeError:
                     pass
                 self.metrics.observe("queue_wait_steps",
-                                     step_clock - arrive_step)
+                                     step_clock - entry.arrive_step)
             if self.rec.enabled:
                 rid = self._rids[id(req)]
                 self.rec.end(rid, "QUEUED", step_clock)
                 self.rec.instant(rid, "PREFILLING", "ADMITTED", step_clock,
                                  slot=slot, prompt_tokens=len(ids),
                                  pages=self.pool.pages_needed(len(ids)),
-                                 shared_pages=n_share, replay=not fresh0)
+                                 shared_pages=n_share, replay=not fresh0,
+                                 resume_from=resume_from or 0)
                 self.rec.begin(rid, "PREFILLING", step_clock, slot=slot)
             st.write_from = write_from
             # proposer corpus: prompt + every generated token (a resumed
@@ -469,7 +572,12 @@ class Scheduler:
             # inside a shared prefix still runs one 1-token chunk at its
             # last position to sample the first output token; a resumed one
             # needs no compute at all.
-            if write_from < len(ids):
+            if resume_from is not None:
+                # true resume: pick up at the exact chunk boundary the
+                # preemption interrupted — the kept pages already hold
+                # every position below it, so ZERO chunks re-run
+                st.pre_pos = resume_from
+            elif write_from < len(ids):
                 st.pre_pos = write_from
             elif fresh:
                 st.pre_pos = len(ids) - 1
@@ -487,50 +595,95 @@ class Scheduler:
 
     # -- chunked prefill -----------------------------------------------------
 
+    def _prefill_pick(self, cands, step_clock: int):
+        """The chunk picker: shortest-remaining-first with an aging credit
+        (``prefill_aging`` remaining-token equivalents forgiven per step a
+        request has waited since FIRST arrival), admission order as the
+        tie-break.  Pure SRF starves a long prompt forever under a
+        sustained short-request stream; with aging > 0 its effective key
+        eventually undercuts every fresh short prompt, bounding its wait
+        by ~remaining/aging steps.  Returns the top ``prefill_slots``."""
+        def key(j):
+            st = self.slots[j]
+            remaining = len(st.ids) - st.pre_pos
+            waited = step_clock - st.arrive_step
+            return (remaining - self.prefill_aging * waited, st.seq)
+        return sorted(cands, key=key)[: self.prefill_slots]
+
     def _prefill_chunk_step(self, step_clock: int):
-        """Advance ONE prefilling slot by one bucketed chunk (the per-step
-        prompt-token budget).  Shortest-remaining-first among prefilling
-        slots, admission order as the tie-break.  Returns the chunk's
-        step-record info dict (slot + buckets) when a chunk ran, else
-        None."""
+        """Advance up to ``prefill_slots`` prefilling slots by one bucketed
+        chunk each, in ONE traced call over a full-pool-width
+        ``[n_slots, C]`` block (aging-adjusted shortest-remaining-first
+        pick, :meth:`_prefill_pick`).  Slots not advancing — idle,
+        decoding, or unchosen prefilling — ride along as all-padding rows
+        with zeroed page-table rows and empty write windows, so their
+        writes land on scratch page 0 and their outputs are discarded:
+        the slot count never changes traced shapes, and the compile-count
+        bound stays ``prefill_traces <= chunk_buckets x page_buckets``.
+        Returns the step-record info dict (slots + buckets) when chunks
+        ran, else None."""
         cands = [i for i, s in enumerate(self.slots)
                  if s is not None and s.prefilling]
         if not cands:
             return None
-        slot = min(cands, key=lambda j: (len(self.slots[j].ids)
-                                         - self.slots[j].pre_pos,
-                                         self.slots[j].seq))
-        st = self.slots[slot]
-        ids, done = st.ids, st.pre_pos
-        n = min(self.prefill_chunk, len(ids) - done)
-        cb = bucket_chunk(n, self.prefill_chunk)
-        toks = np.zeros((1, cb), np.int32)
-        toks[0, :n] = ids[done:done + n]
-        # page budget: every page a chunk query can read (positions
-        # [0, done + cb)), bucketed like the decode read budget
+        chosen = self._prefill_pick(cands, step_clock)
+        m = self.metrics
+        # anti-starvation face: the worst age any still-prefilling prompt
+        # has reached (serve_bench gates this under the aging bound)
+        m.prefill_wait_steps_max = max(
+            m.prefill_wait_steps_max,
+            max(step_clock - self.slots[j].arrive_step for j in cands))
+        ns = {}                         # slot -> valid tokens this chunk
+        for j in chosen:
+            st = self.slots[j]
+            ns[j] = min(self.prefill_chunk, len(st.ids) - st.pre_pos)
+        # shared buckets: chunk shape = pow2 of the LARGEST chosen chunk,
+        # page budget = pow2 of the largest chosen read range (positions
+        # [0, done + cb)) — one compiled executable per (cb, pb) pair
+        cb = bucket_chunk(max(ns.values()), self.prefill_chunk)
         ps = self.pool.page_size
-        pb = self.pool.bucket_pages(math.ceil((done + cb) / ps))
-        tab = self.pool.page_table[slot, :pb]
-        # the write window never touches prefix-shared pages (they are
-        # mapped read-only) nor the chunk's padding tail
-        w_lo, w_hi = max(done, st.write_from), min(done + n, len(ids))
+        pb = self.pool.bucket_pages(max(
+            math.ceil((self.slots[j].pre_pos + cb) / ps) for j in chosen))
+        n_slots = self.pool.n_slots
+        toks = np.zeros((n_slots, cb), np.int32)
+        start = np.zeros(n_slots, np.int32)
+        w_lo = np.zeros(n_slots, np.int32)
+        w_hi = np.zeros(n_slots, np.int32)
+        tab = np.zeros((n_slots, pb), np.int32)
+        for j, n in ns.items():
+            st = self.slots[j]
+            done = st.pre_pos
+            toks[j, :n] = st.ids[done:done + n]
+            tab[j] = self.pool.page_table[j, :pb]
+            start[j] = done
+            # the write window never touches prefix-shared pages (they
+            # are mapped read-only) nor the chunk's padding tail
+            w_lo[j] = max(done, st.write_from)
+            w_hi[j] = min(done + n, len(st.ids))
         nxt, new_kv = self.prefill(
             jnp.asarray(toks), self.pool.state(), jnp.asarray(tab),
-            jnp.asarray(done, jnp.int32), jnp.asarray(w_lo, jnp.int32),
-            jnp.asarray(w_hi, jnp.int32))
+            jnp.asarray(start), jnp.asarray(w_lo), jnp.asarray(w_hi))
         self.pool.adopt(new_kv)
-        m = self.metrics
-        m.prefill_chunks += 1
-        m.prefill_chunk_tokens += n
-        st.pre_pos = done + n
-        if self.rec.enabled:
-            self.rec.instant(self._rids[id(st.req)], "PREFILLING", "CHUNK",
-                             step_clock, slot=slot, tokens=n,
-                             chunk_bucket=cb, page_bucket=pb,
-                             done=st.pre_pos, total=len(ids))
-        if st.pre_pos >= len(ids):
-            self._activate(slot, int(np.asarray(nxt)[0, n - 1]), step_clock)
-        return {"slot": slot, "chunk_bucket": cb, "page_bucket": pb}
+        outs = np.asarray(nxt)          # [n_slots, cb]
+        m.prefill_steps += 1
+        if len(ns) > 1:
+            m.prefill_multi_steps += 1
+        for j, n in ns.items():
+            st = self.slots[j]
+            m.prefill_chunks += 1
+            m.prefill_chunk_tokens += n
+            first = self._first.get(id(st.req))
+            if first is not None:
+                first["own"] += n
+            st.pre_pos += n
+            if self.rec.enabled:
+                self.rec.instant(self._rids[id(st.req)], "PREFILLING",
+                                 "CHUNK", step_clock, slot=j, tokens=n,
+                                 chunk_bucket=cb, page_bucket=pb,
+                                 done=st.pre_pos, total=len(st.ids))
+            if st.pre_pos >= len(st.ids):
+                self._activate(j, int(outs[j, n - 1]), step_clock)
+        return {"slots": sorted(ns), "chunk_bucket": cb, "page_bucket": pb}
 
     def _activate(self, slot: int, sampled: Optional[int],
                   step_clock: int) -> None:
@@ -561,10 +714,17 @@ class Scheduler:
             # other requests' prompt tokens prefilled between this
             # request's arrival and its first token — the deterministic
             # face of TTFT under prefill contention (chunking bounds it by
-            # one chunk per step; a whole-prompt prefill ahead of a short
-            # request blows it up by the whole prompt)
-            waited = (m.prefill_chunk_tokens - st.tokens_at_arrival
-                      - (len(st.ids) - st.pre_start))
+            # prefill_slots chunks per step; a whole-prompt prefill ahead
+            # of a short request blows it up by the whole prompt).
+            # Derived from FIRST-arrival state (global token clock at
+            # arrival + this request's own chunk tokens across every
+            # attempt), so preemption replays never double-count — and
+            # with true chunk-boundary resume a mid-prefill preemption
+            # re-runs zero chunks, leaving every request's stamp
+            # replay-invariant.
+            first = self._first.get(id(st.req), {
+                "tok0": 0, "own": len(st.ids) - st.pre_start})
+            waited = (m.prefill_chunk_tokens - first["tok0"] - first["own"])
             # stamp the request so load generators can split TTFT by class
             for name, val in (("ttft_s", ttft),
                               ("ttft_steps", step_clock - st.arrive_step),
@@ -683,7 +843,14 @@ class Scheduler:
                     live = [j for j, s in enumerate(self.slots)
                             if s is not None]
                     victim = max(live, key=self._held_tokens)
+                    free0 = self.pool.pages_free
                     self._preempt(victim, queue)
+                    if self.pool.pages_free <= free0:
+                        # the victim's pages were detached (mid-prefill
+                        # resume) or shared: eviction freed nothing, so
+                        # reclaim a detached reservation before burning
+                        # another victim
+                        self._reclaim_detached(queue)
                 if self.slots[i] is None:
                     break               # preempted while backing its pages
 
@@ -696,26 +863,39 @@ class Scheduler:
 
     def _preempt(self, slot: int, queue) -> None:
         st = self.slots[slot]
+        # a mid-prefill victim resumes from the TRUE chunk boundary: the
+        # pages holding content so far — its own chunks' [0, pre_pos) plus
+        # any prefix-shared span — detach from the slot (refcounts kept,
+        # ownership travels with the queue entry) instead of being freed,
+        # so the eventual replay re-runs ZERO chunks.  A decode victim (or
+        # an untouched prefill) takes the classic full-release + replay
+        # path.  min(write_from, len(ids)) covers the fresh fully-shared
+        # case, whose shared tail page holds K/V past pre_pos.
+        resume = None
+        if st.prefilling:
+            valid = max(st.pre_pos, min(st.write_from, len(st.ids)))
+            if valid > 0:
+                kept = self.pool.detach_prefix(slot, valid)
+                resume = (kept, st.pre_pos, st.write_from)
         if self.rec.enabled:
             rid = self._rids[id(st.req)]
             phase = "PREFILLING" if st.prefilling else "DECODING"
             self.rec.end(rid, phase, self._step, preempted=True)
             self.rec.instant(rid, phase, "PREEMPTED", self._step, slot=slot,
-                             held_tokens=self._held_tokens(slot))
+                             held_tokens=self._held_tokens(slot),
+                             kept_pages=len(resume[0]) if resume else 0)
             # the request re-queues: its replay admission ends this span
             self.rec.begin(rid, "QUEUED", self._step)
-        self.pool.release(slot)
+        if resume is None:
+            self.pool.release(slot)
         self.slots[slot] = None
         self.pos[slot] = 0
         self.metrics.preemptions += 1
-        # replay resumes at a chunk boundary: a decode slot re-prefills
-        # prompt + generated tokens in chunks; a mid-prefill slot restarts
-        # its prefill from the first chunk.  The chunk tokens this slot's
-        # own first attempt burned are credited forward so its eventual
-        # ttft_prefill_tokens stamp still counts only FOREIGN prefill.
-        queue.appendleft([st.req, 0, st.submit_t, st.arrive_step,
-                          st.tokens_at_arrival
-                          + (st.pre_pos - st.pre_start)])
+        # replay resumes at a chunk boundary; first-arrival identity
+        # (submit_t / arrive_step) rides the entry so TTFT clocks and the
+        # aging credit keep counting from the ORIGINAL arrival
+        queue.appendleft(_QEntry(st.req, 0, st.submit_t, st.arrive_step,
+                                 resume=resume))
 
     # -- token bookkeeping ----------------------------------------------------
 

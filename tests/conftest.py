@@ -10,6 +10,23 @@ jax.config.update("jax_enable_x64", False)
 
 # Optional dev deps (requirements-dev.txt): the property-test modules call
 # pytest.importorskip("hypothesis") at import, so a missing install degrades
-# to module-level skips instead of collection errors.  Nothing to do here —
-# this note is the contract; keep new hypothesis-using modules on the same
-# pattern.
+# to module-level skips instead of collection errors.  Keep new
+# hypothesis-using modules on that pattern.
+#
+# Hypothesis profiles are registered HERE (once, for every property module)
+# rather than per-module:
+#   * "dev" (default) — a handful of examples so the tier-1 gate stays fast;
+#   * "ci"            — the property-suite CI job's profile: bounded but real
+#     example counts, no deadline (first examples pay jit compiles), and
+#     derandomized so a red run is reproducible from the log alone.  Select
+#     it with the hypothesis pytest plugin's own flag:
+#     ``pytest --hypothesis-profile=ci``.
+try:
+    from hypothesis import settings
+except ImportError:
+    pass
+else:
+    settings.register_profile("ci", deadline=None, max_examples=200,
+                              derandomize=True)
+    settings.register_profile("dev", deadline=None, max_examples=20)
+    settings.load_profile("dev")

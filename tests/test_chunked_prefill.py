@@ -17,8 +17,17 @@ Acceptance criteria covered here:
   * prefix sharing still skips re-prefill: a fully-shared prompt runs ONE
     1-token chunk, and admission WAITS (pending) rather than recompute a
     prefix its source is writing right now;
-  * preemption mid-prefill releases the pages and replays from the first
-    chunk with bit-identical results on fp pages.
+  * up to ``prefill_slots`` prefilling slots advance ONE traced call per
+    step — batching changes step counts, never outputs or trace counts;
+  * the aging term (``prefill_aging``) bounds a long prompt's wait under
+    a sustained short-request stream where pure SRF starves it;
+  * preemption mid-prefill detaches the written pages and resumes from
+    the true chunk boundary — the replay re-runs ZERO written chunks
+    (``prefill_chunk_tokens`` counts every prompt id exactly once), with
+    bit-identical results on fp pages;
+  * TTFT / queue-wait accounting is replay-invariant: re-derived from
+    first-admission state, stamped and observed exactly once per request
+    no matter how often it is preempted and readmitted.
 """
 import jax
 import jax.numpy as jnp
@@ -246,3 +255,145 @@ def test_preemption_replays_through_chunks_bit_exact(small_model):
     assert m_small.preemptions >= 1
     assert toks_small == toks_big
     assert m_small.completed == 3
+
+
+# ---------------------------------------------------------------------------
+# Multi-slot batched prefill
+# ---------------------------------------------------------------------------
+
+def test_multi_slot_prefill_batches_and_matches_single_slot(small_model):
+    """Three prompts prefilling together: with prefill_slots=3 their chunks
+    ride ONE traced call per step (fewer batched steps, >= one multi-slot
+    step), per-slot chunk accounting is unchanged, the compile count stays
+    inside the (chunk-bucket x page-bucket) bound, and outputs are
+    bit-identical to the single-slot schedule."""
+    cfg, params = small_model
+
+    def run(slots):
+        eng = ServeEngine(cfg, params, max_batch=3, s_max=64, page_size=8,
+                          kv_mode="fp", cache_dtype=jnp.float32,
+                          prefill_chunk=4, prefill_slots=slots,
+                          prefix_sharing=False)
+        reqs = [Request("a" * 20, max_new_tokens=4),
+                Request("b" * 24, max_new_tokens=4),
+                Request("c" * 12, max_new_tokens=4)]
+        eng.generate(reqs)
+        return [r.out_tokens for r in reqs], eng.metrics, eng
+
+    t1, m1, e1 = run(1)
+    t3, m3, e3 = run(3)
+    assert t3 == t1                           # batching never changes output
+    assert m3.prefill_multi_steps >= 1        # >= one step ran 2+ slots
+    assert m1.prefill_multi_steps == 0
+    assert m3.prefill_steps < m1.prefill_steps
+    assert m3.prefill_chunks == m1.prefill_chunks   # per-slot accounting
+    for e in (e1, e3):   # full-pool-width batching adds no compiles
+        chunk_b = {c for c, _ in e.prefill_buckets}
+        page_b = {p for _, p in e.prefill_buckets}
+        assert e.prefill_traces <= len(chunk_b) * len(page_b)
+
+
+# ---------------------------------------------------------------------------
+# Anti-starvation aging
+# ---------------------------------------------------------------------------
+
+def test_aging_bounds_long_prompt_starvation(small_model):
+    """A long prompt facing a sustained stream of short requests through a
+    ONE-slot chunk picker: pure shortest-remaining-first (aging=0) starves
+    it behind every short, while aging=1.0 forgives one remaining-token
+    per waited step so only shorts that arrived early enough still beat
+    it — its TTFT is bounded independently of the stream length."""
+    cfg, params = small_model
+
+    def run(aging):
+        eng = ServeEngine(cfg, params, max_batch=4, s_max=64, page_size=8,
+                          kv_mode="fp", cache_dtype=jnp.float32,
+                          prefill_chunk=4, prefill_slots=1,
+                          prefill_aging=aging, prefix_sharing=False)
+        long = Request("L" * 23, max_new_tokens=2)           # 24 ids
+        shorts = [Request(f"s{i:02d}chars", max_new_tokens=1)  # 9 ids each
+                  for i in range(30)]
+        eng.generate([long] + shorts,
+                     arrivals=[0] + [1 + i for i in range(30)])
+        assert long.done and all(s.done for s in shorts)
+        return long.ttft_steps, eng.metrics
+
+    # aging=1.0 orders by (arrival + remaining): only shorts arriving
+    # before step 24 - 9 = 15 outrank the long -> ~15 shorts * 3 chunks
+    # + its own 6 chunks; aging=0 runs all 30 shorts (90 chunk-steps)
+    # first.  70 sits between with margin on both sides.
+    bound = 70
+    ttft_aged, m_aged = run(1.0)
+    ttft_srf, m_srf = run(0.0)
+    assert ttft_aged <= bound, (ttft_aged, ttft_srf)
+    assert ttft_srf > bound, (ttft_aged, ttft_srf)
+    assert m_aged.prefill_wait_steps_max < m_srf.prefill_wait_steps_max
+
+
+# ---------------------------------------------------------------------------
+# True chunk-boundary resume + replay-invariant latency accounting
+# ---------------------------------------------------------------------------
+
+_RESUME_RUNS = {}
+
+
+def _resume_runs(small_model):
+    """Memoized preempt-mid-prefill scenario, uncontended vs tight pool.
+
+    page_size=4, n_pages=8 (7 usable): the long prompt (21 ids, 6 pages)
+    admits first and prefills one chunk; the decoder admits on the last
+    free page and its growth preempts the long MID-PREFILL (it holds the
+    most tokens).  detach_prefix keeps the 8 written positions' pages;
+    readmission waits until the decoder finishes, then resumes at
+    pre_pos=8."""
+    key = id(small_model)
+    if key not in _RESUME_RUNS:
+        cfg, params = small_model
+
+        def run(n_pages):
+            eng = ServeEngine(cfg, params, max_batch=2, s_max=32,
+                              page_size=4, n_pages=n_pages, kv_mode="fp",
+                              cache_dtype=jnp.float32, prefill_chunk=4,
+                              prefix_sharing=False)
+            long = Request("z" * 20, max_new_tokens=4)
+            dec = Request("abc", max_new_tokens=10)
+            eng.generate([long, dec], arrivals=[0, 1])
+            return (long, dec), eng.metrics
+
+        _RESUME_RUNS[key] = (run(None), run(8))
+    return _RESUME_RUNS[key]
+
+
+def test_mid_prefill_preemption_resumes_at_chunk_boundary(small_model):
+    """A slot preempted mid-prefill resumes from the true chunk boundary:
+    the replay re-runs ZERO already-written chunks — total chunk tokens
+    equal the two prompts' ids exactly, as in the uncontended run — and
+    fp-page streams are bit-identical through the resume."""
+    (reqs_u, m_u), (reqs_t, m_t) = _resume_runs(small_model)
+    assert m_u.preemptions == 0 and m_u.prefill_resumes == 0
+    assert m_t.preemptions >= 1
+    assert m_t.prefill_resumes >= 1
+    ids = len(tok.encode("z" * 20)) + len(tok.encode("abc"))   # 21 + 4
+    assert m_u.prefill_chunk_tokens == ids
+    assert m_t.prefill_chunk_tokens == ids          # zero chunks re-run
+    assert [r.out_tokens for r in reqs_t] == [r.out_tokens for r in reqs_u]
+    assert m_t.completed == 2
+
+
+def test_ttft_queue_wait_replay_invariant(small_model):
+    """ttft_prefill_tokens and queue_wait_steps are re-derived from
+    FIRST-admission state: preempting and readmitting a request changes
+    neither, and each request lands in the queue-wait histogram exactly
+    once."""
+    (reqs_u, m_u), (reqs_t, m_t) = _resume_runs(small_model)
+    (long_u, dec_u), (long_t, dec_t) = reqs_u, reqs_t
+    # foreign-token TTFT window: identical despite preempt + readmit
+    assert long_t.ttft_prefill_tokens == long_u.ttft_prefill_tokens
+    assert dec_t.ttft_prefill_tokens == dec_u.ttft_prefill_tokens
+    # queue wait stamps at FIRST admission only — readmission never
+    # re-stamps (the long was admitted at step 0 in both runs)
+    assert long_t.queue_wait_steps == long_u.queue_wait_steps == 0
+    assert dec_t.queue_wait_steps == dec_u.queue_wait_steps
+    # observed exactly once per request, preempted or not
+    for m in (m_u, m_t):
+        assert m.registry.histogram("hist/queue_wait_steps").count == 2

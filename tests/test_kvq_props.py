@@ -11,12 +11,9 @@ import pytest
 pytest.importorskip(
     "hypothesis",
     reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.serve import kvq
-
-settings.register_profile("ci", deadline=None, max_examples=30)
-settings.load_profile("ci")
 
 
 @st.composite

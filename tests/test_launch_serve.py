@@ -1,7 +1,8 @@
 """CLI flag plumbing for the serving launcher (`repro.launch.serve`).
 
 Previously exercised only by hand: these tests pin that `--backend`,
-`--kv-mode`, `--page-size`, `--n-pages`, `--prefill-chunk`, `--spec-mode`,
+`--kv-mode`, `--page-size`, `--n-pages`, `--prefill-chunk`,
+`--prefill-slots`, `--prefill-aging`, `--spec-mode`,
 `--spec-k`, `--max-batch` and `--s-max` reach `ServeEngine` unmangled (and
 that `--quant`/`--backend` reach the quantization policy), by stubbing the
 engine/quantizer at the launcher's module seam — no model compute runs.
@@ -21,7 +22,9 @@ class _StubMetrics:
         # every key the launcher's summary line reads
         return {k: 0.0 for k in (
             "tokens_per_sec", "decode_steps", "decode_batch_mean",
-            "prefills", "prefill_chunks", "interleaved_steps",
+            "prefills", "prefill_chunks", "prefill_steps",
+            "prefill_multi_steps", "prefill_batch_mean",
+            "prefill_resumes", "interleaved_steps",
             "decode_stall_steps", "ttft_ms_mean", "pool_occupancy_mean",
             "pool_occupancy_peak", "fragmentation_mean", "cache_bytes",
             "kv_read_savings", "kv_bytes_read", "kv_bytes_read_dense",
@@ -82,6 +85,7 @@ def test_defaults_reach_engine(stubbed):
     assert kw["page_size"] == 16
     assert kw["n_pages"] is None
     assert kw["prefill_chunk"] == 32
+    assert kw["prefill_slots"] == 2 and kw["prefill_aging"] == 1.0
     assert kw["cache_dtype"] == jnp.bfloat16
     assert eng.params is not None           # fp path: raw params, no artifact
 
@@ -89,13 +93,16 @@ def test_defaults_reach_engine(stubbed):
 def test_pool_flags_reach_engine_unmangled(stubbed):
     eng = _engine_kw(
         ["--quant", "fp", "--kv-mode", "int8", "--page-size", "4",
-         "--n-pages", "99", "--prefill-chunk", "7", "--max-batch", "5",
+         "--n-pages", "99", "--prefill-chunk", "7", "--prefill-slots", "3",
+         "--prefill-aging", "0.5", "--max-batch", "5",
          "--s-max", "256"], stubbed)
     kw = eng.kw
     assert kw["kv_mode"] == "int8"
     assert kw["page_size"] == 4
     assert kw["n_pages"] == 99
     assert kw["prefill_chunk"] == 7
+    assert kw["prefill_slots"] == 3
+    assert kw["prefill_aging"] == 0.5
     assert kw["max_batch"] == 5
     assert kw["s_max"] == 256
 

@@ -1,0 +1,250 @@
+"""Scheduler/pool property + fuzz suite (ISSUE: multi-slot prefill PR).
+
+Randomized arrival patterns, prompt lengths, output lengths, pool sizes and
+preemption-pressure configs, asserting the invariants the serving stack
+promises regardless of schedule:
+
+  * no page leaks — after every request finishes the free list returns to
+    full (``pages_free == n_pages - 1``) and the slot table is empty;
+  * refcounts are never negative, sampled at every emitted token and at
+    the end of the run;
+  * every emitted stream is bit-identical to the single-request fp-page
+    oracle (same prompt, alone on an uncontended engine) — batching,
+    multi-slot prefill, aging, preemption and true chunk-boundary resume
+    may reorder WORK but never change OUTPUT;
+  * ``lifecycle_errors() == []`` on a traced run (span pairing, state
+    ordering, step accounting);
+  * trace counters stay within the bucket bounds
+    (``prefill_traces <= chunk_buckets * page_buckets`` and
+    ``decode_traces == len(decode_buckets)``) — randomized load never
+    causes a per-shape recompile.
+
+Plus a pure host-side PagePool fuzz over the detach_prefix / readmit /
+drop_detached resume API (no jit): refcount-vs-table conservation under
+arbitrary interleavings.
+
+Follows the repo's optional-dev-dep contract (see tests/conftest.py): a
+missing hypothesis install skips this module.  Profiles ("dev" default,
+"ci" via ``pytest --hypothesis-profile=ci``) come from conftest.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r requirements-dev.txt)")
+from hypothesis import given, strategies as st
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.obs.trace import TraceRecorder, lifecycle_errors
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.pool import PagePool
+
+# ---------------------------------------------------------------------------
+# Shared tiny model + memoized engines (compiles amortize across examples)
+# ---------------------------------------------------------------------------
+
+_MODEL = None
+
+
+def _model():
+    global _MODEL
+    if _MODEL is None:
+        cfg = get_config("gpt2-small", reduced=True).replace(
+            n_layers=1, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64,
+            vocab_size=120)
+        _MODEL = (cfg, T.init_params(cfg, jax.random.PRNGKey(0)))
+    return _MODEL
+
+
+# Fixed engine configs the strategy picks between — roomy pools, a
+# one-slot pure picker, and two tight pools that force preemption +
+# true-resume under random load.  All fp pages at fp32 (bit-exact oracle).
+_CONFIGS = (
+    dict(page_size=8, max_batch=3, s_max=48, n_pages=None,
+         prefill_chunk=8, prefill_slots=2, prefill_aging=1.0),
+    dict(page_size=4, max_batch=2, s_max=48, n_pages=None,
+         prefill_chunk=4, prefill_slots=1, prefill_aging=0.0),
+    dict(page_size=8, max_batch=3, s_max=48, n_pages=11,
+         prefill_chunk=4, prefill_slots=2, prefill_aging=1.0),
+    dict(page_size=8, max_batch=2, s_max=48, n_pages=9,
+         prefill_chunk=8, prefill_slots=3, prefill_aging=0.5),
+)
+_ENGINES = {}
+
+
+def _engine(key):
+    kw = _CONFIGS[key] if isinstance(key, int) else dict(
+        page_size=8, max_batch=2, s_max=48, n_pages=None,
+        prefill_chunk=8, prefill_slots=2, prefill_aging=1.0)
+    eng = _ENGINES.get(key)
+    if eng is not None and eng.pool.pages_free != eng.pool.n_pages - 1:
+        eng = None          # poisoned by an earlier failing example
+    if eng is None:
+        cfg, params = _model()
+        eng = ServeEngine(cfg, params, kv_mode="fp",
+                          cache_dtype=jnp.float32, **kw)
+        _ENGINES[key] = eng
+    return eng
+
+
+_ORACLE = {}
+
+
+def _oracle(prompt, max_new):
+    """Single-request run on an uncontended fp-page engine (memoized)."""
+    key = (prompt, max_new)
+    if key not in _ORACLE:
+        req = Request(prompt, max_new_tokens=max_new)
+        _engine("oracle").generate([req])
+        _ORACLE[key] = list(req.out_tokens)
+    return _ORACLE[key]
+
+
+# ---------------------------------------------------------------------------
+# Randomized end-to-end load
+# ---------------------------------------------------------------------------
+
+@st.composite
+def _workload(draw):
+    cfg_ix = draw(st.integers(0, len(_CONFIGS) - 1))
+    n = draw(st.integers(1, 5))
+    # tiny alphabet -> natural prompt-prefix collisions exercise sharing
+    prompts = [draw(st.text(alphabet="abc ", min_size=1, max_size=30))
+               for _ in range(n)]
+    max_new = [draw(st.integers(1, 6)) for _ in range(n)]
+    arrivals = [draw(st.integers(0, 6)) for _ in range(n)]
+    return cfg_ix, prompts, max_new, arrivals
+
+
+@given(_workload())
+def test_random_load_invariants(case):
+    cfg_ix, prompts, max_new, arrivals = case
+    eng = _engine(cfg_ix)
+    pool = eng.pool
+    assert pool.pages_free == pool.n_pages - 1   # clean pool going in
+
+    refcount_ok = []
+
+    def watch(_tok):
+        # sampled at every emitted token: refcounts never go negative
+        refcount_ok.append(bool((pool.refcount >= 0).all()))
+
+    reqs = [Request(p, max_new_tokens=mn, stream=watch)
+            for p, mn in zip(prompts, max_new)]
+    rec = TraceRecorder()
+    saved = eng.recorder
+    eng.recorder = rec
+    try:
+        eng.generate(reqs, arrivals)
+    finally:
+        eng.recorder = saved
+
+    assert all(r.done for r in reqs)
+    # no page leaks: free list returns to full, table empty, refs zeroed
+    assert pool.pages_free == pool.n_pages - 1
+    assert not pool.page_table.any()
+    assert (pool.refcount == 0).all()
+    # refcounts never negative at any sampled point
+    assert refcount_ok and all(refcount_ok)
+    # streams bit-identical to the single-request oracle
+    for r in reqs:
+        assert r.out_tokens == _oracle(r.prompt, r.max_new_tokens), r.prompt
+    # traced lifecycle is well-formed
+    assert lifecycle_errors(rec.events,
+                            decode_steps=eng.metrics.decode_steps) == []
+    # compile counters stay within bucket bounds (engine lifetime)
+    chunk_b = {c for c, _ in eng.prefill_buckets}
+    page_b = {p for _, p in eng.prefill_buckets}
+    assert eng.prefill_traces <= len(chunk_b) * len(page_b)
+    assert eng.decode_traces == len(eng.decode_buckets)
+
+
+# ---------------------------------------------------------------------------
+# Host-side PagePool fuzz: the detach/readmit/drop resume API
+# ---------------------------------------------------------------------------
+
+def _check_pool(pool, active, detached):
+    """Refcount-vs-ownership conservation after every op."""
+    assert (pool.refcount >= 0).all()
+    assert pool.refcount[0] == 0                 # scratch page never owned
+    live = {int(p) for p in pool.page_table.ravel() if p}
+    live |= {int(p) for pages, _ in detached for p in pages}
+    assert live == {i for i in range(pool.n_pages) if pool.refcount[i] > 0}
+    assert sorted(pool._free) == sorted(set(range(1, pool.n_pages)) - live)
+    refs = int((pool.page_table != 0).sum()) + sum(
+        len(p) for p, _ in detached)
+    assert int(pool.refcount.sum()) == refs
+    for slot, n_tok in active.items():
+        assert int((pool.page_table[slot] != 0).sum()) == \
+            pool.pages_needed(n_tok)
+
+
+@given(st.data())
+def test_pool_detach_readmit_drop_fuzz(data):
+    """Arbitrary interleavings of admit / release / detach_prefix /
+    readmit / drop_detached never leak a page, never double-free, and
+    always return the pool to a full free list at teardown."""
+    cfg, _ = _model()
+    pool = PagePool(cfg, 3, 32, page_size=4, n_pages=12, mode="fp",
+                    dtype=jnp.float32)
+    active = {}          # slot -> n_tokens
+    detached = []        # (pages, n_tokens) awaiting readmit or drop
+    for _ in range(data.draw(st.integers(1, 40), label="n_ops")):
+        ops = ["admit"]
+        if active:
+            ops += ["release", "detach"]
+        if detached:
+            ops += ["readmit", "drop"]
+        op = data.draw(st.sampled_from(ops), label="op")
+        if op == "admit":
+            free = [s for s in range(pool.n_slots) if s not in active]
+            if not free:
+                continue
+            slot = data.draw(st.sampled_from(free), label="slot")
+            n_tok = data.draw(st.integers(1, pool.capacity), label="tokens")
+            if pool.pages_needed(n_tok) > pool.pages_free:
+                continue                       # scheduler guards this
+            pool.admit(slot, n_tok)
+            active[slot] = n_tok
+        elif op == "release":
+            slot = data.draw(st.sampled_from(sorted(active)), label="slot")
+            pool.release(slot)
+            del active[slot]
+        elif op == "detach":
+            slot = data.draw(st.sampled_from(sorted(active)), label="slot")
+            n_tok = active.pop(slot)
+            keep = data.draw(st.integers(0, n_tok), label="keep")
+            pages = pool.detach_prefix(slot, keep)
+            assert len(pages) == (pool.pages_needed(keep) if keep else 0)
+            detached.append((pages, n_tok))
+        elif op == "readmit":
+            free = [s for s in range(pool.n_slots) if s not in active]
+            if not free:
+                continue
+            slot = data.draw(st.sampled_from(free), label="slot")
+            ix = data.draw(st.integers(0, len(detached) - 1), label="entry")
+            pages, n_tok = detached[ix]
+            before = pool.pages_free
+            if pool.readmit(slot, n_tok, pages):
+                active[slot] = n_tok
+                detached.pop(ix)
+            else:
+                # refused: nothing installed, references untouched
+                assert not pool.page_table[slot].any()
+                assert pool.pages_free == before
+        else:                                  # drop
+            ix = data.draw(st.integers(0, len(detached) - 1), label="entry")
+            pages, _ = detached.pop(ix)
+            pool.drop_detached(pages)
+        _check_pool(pool, active, detached)
+    for slot in list(active):
+        pool.release(slot)
+    for pages, _ in detached:
+        pool.drop_detached(pages)
+    assert pool.pages_free == pool.n_pages - 1
+    assert (pool.refcount == 0).all()
+    assert not pool.page_table.any()
